@@ -1,0 +1,76 @@
+"""Shared benchmark context: one parallelism sweep reused by every figure.
+
+The paper's experiments all derive from CoCoA/CoCoA+ runs on MNIST at
+m = 1..128; we run the same sweep once on the synthetic stand-in (scaled to
+CPU budget) and hand the curves to each figure's benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ConvergenceData, ConvergenceModel, ErnestModel
+from repro.optim import BSPCluster, ERMProblem, synthetic_mnist
+from repro.optim.simcluster import SimResult, solve_reference
+
+
+@dataclasses.dataclass
+class BenchContext:
+    problem: ERMProblem
+    cluster: BSPCluster
+    p_star: float
+    ms: Tuple[int, ...]
+    sims: Dict[str, Dict[int, SimResult]]  # algorithm -> m -> result
+    outer_iters: int
+
+    def curves(self, algorithm: str = "cocoa+") -> Dict[int, np.ndarray]:
+        return {m: np.minimum.accumulate(s.record.primal)
+                for m, s in self.sims[algorithm].items()}
+
+    def convergence_data(self, algorithm: str = "cocoa+",
+                         stop_gap: Optional[float] = 1e-4) -> ConvergenceData:
+        return ConvergenceData.from_curves(
+            self.curves(algorithm), self.p_star - 1e-6, stop_gap=stop_gap)
+
+    def ernest_model(self, algorithm: str = "cocoa+") -> ErnestModel:
+        ms = sorted(self.sims[algorithm])
+        t = [self.sims[algorithm][m].t_iter for m in ms]
+        return ErnestModel().fit(np.asarray(ms, float),
+                                 np.full(len(ms), self.problem.n, float),
+                                 np.asarray(t))
+
+
+_CTX: Optional[BenchContext] = None
+
+
+def get_context(quick: bool = False) -> BenchContext:
+    global _CTX
+    if _CTX is not None:
+        return _CTX
+    t0 = time.time()
+    if quick:
+        n, d, ms, iters = 4096, 128, (1, 2, 4, 8, 16), 30
+    else:
+        n, d, ms, iters = 16_384, 256, (1, 2, 4, 8, 16, 32, 64, 128), 60
+    X, y = synthetic_mnist(n, d, 40, 0.09, 0.35, 0)
+    problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-4,
+                         loss="hinge")
+    cluster = BSPCluster()
+    p_star, _ = solve_reference(problem, iters=max(3 * iters, 150))
+    sims: Dict[str, Dict[int, SimResult]] = {}
+    for algo in ("cocoa", "cocoa+"):
+        sims[algo] = {m: cluster.simulate(problem, algo, m, iters, seed=1)
+                      for m in ms}
+    # Fig 1c comparison set at m=16 (or max available)
+    m_cmp = 16 if 16 in ms else max(ms)
+    for algo in ("local_sgd", "minibatch_sgd"):
+        sims[algo] = {m_cmp: cluster.simulate(problem, algo, m_cmp, iters,
+                                              seed=1)}
+    print(f"# context built in {time.time() - t0:.0f}s "
+          f"(n={n}, d={d}, ms={ms}, iters={iters})", flush=True)
+    _CTX = BenchContext(problem, cluster, p_star, tuple(ms), sims, iters)
+    return _CTX

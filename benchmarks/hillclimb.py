@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing harness.
+
+Selects the three target cells from the baseline roofline table (worst
+roofline fraction / most collective-bound / most representative of the
+paper's technique), then lowers + analyzes variants, recording
+hypothesis -> change -> before -> after for EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --select       # pick cells
+  PYTHONPATH=src python -m benchmarks.hillclimb --run absorb   # one variant
+  PYTHONPATH=src python -m benchmarks.hillclimb --drill ARCH SHAPE [METRIC]
+"""
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.roofline import load_results, roofline_fraction
+from repro.launch.dryrun import analyze, lower_cell, run_cell
+
+OUT = Path("results/dryrun")
+
+
+def select():
+    rows = load_results(str(OUT), "single")
+    frac = sorted((roofline_fraction(r), r["arch"], r["shape"]) for r in rows)
+    coll = sorted(((r["t_collective_s"] /
+                    max(r["t_compute_s"], r["t_memory_s"],
+                        r["t_collective_s"], 1e-30), r["arch"], r["shape"])
+                   for r in rows), reverse=True)
+    print("worst roofline fraction:")
+    for f, a, s in frac[:5]:
+        print(f"  {f:8.4f}  {a:24s} {s}")
+    print("most collective-bound:")
+    for c, a, s in coll[:5]:
+        print(f"  {c:8.3f}  {a:24s} {s}")
+    print("paper-representative: qwen3-14b train_4k (DiLoCo/local-SGD sync "
+          "amortization = CoCoA's communication-efficiency axis)")
+
+
+def drill(arch: str, shape: str, metric: str = "bytes", multi=False):
+    from repro.dist.hlo_costs import top_contributors
+    lowered, compiled, ctx = lower_cell(arch, shape, multi)
+    r = analyze(lowered, compiled, ctx)
+    print(f"compute={r['t_compute_s']:.3f}s mem={r['t_memory_s']:.3f}s "
+          f"coll={r['t_collective_s']:.3f}s dom={r['dominant']} "
+          f"useful={r['useful_flops_ratio']}")
+    for v, label, comp in top_contributors(compiled.as_text(), metric, 15):
+        print(f"{v/1e9:10.2f} GB|GF  {label[:100]}  {comp}")
+
+
+def run_variant(arch: str, shape: str, tag: str, runtime_overrides=None,
+                rules_overrides=None, multi=False, serve_params_bf16=False):
+    r = run_cell(arch, shape, "multi" if multi else "single", OUT,
+                 force=True, rules_overrides=rules_overrides,
+                 runtime_overrides=runtime_overrides, tag=tag,
+                 serve_params_bf16=serve_params_bf16)
+    if r.get("status") == "ok":
+        print(f"[{tag}] compute={r['t_compute_s']:.3f}s "
+              f"mem={r['t_memory_s']:.3f}s coll={r['t_collective_s']:.3f}s "
+              f"dom={r['dominant']}")
+    else:
+        print(f"[{tag}] FAILED: {r.get('error')}")
+    return r
+
+
+def run_diloco(arch: str = "qwen3-14b", n_replicas: int = 16):
+    """Paper-representative variant: DiLoCo inner step (no data-axis grad
+    sync) on train_4k; collective bytes compared against the synchronous
+    baseline.  Outer sync amortization computed analytically (1/H)."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES_BY_NAME
+    from repro.dist.partitioning import Rules
+    from repro.launch.inputs import batch_sds, opt_state_sds, params_sds
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import LM
+    from repro.models.runtime import Runtime
+    from repro.training.optimizers import get_optimizer
+    from repro.training.trainer import (TrainConfig, make_diloco_inner_step)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME["train_4k"]
+    mesh = make_production_mesh(multi_pod=False)
+    # params replicated per data shard (leading replica axis over 'data'),
+    # TP over model within each replica; batch has NO data sharding inside
+    rules = Rules.default(mesh).override(
+        params={"embed": None},            # no FSDP: each replica holds fp32
+        acts={"batch": None},              # per-replica batch unsharded
+    )
+    rt = Runtime(mesh=mesh, rules=rules, remat="full")
+    lm = LM(cfg, rt)
+    opt = get_optimizer("adamw")
+    p_sds, p_axes = params_sds(lm, mesh, rules)
+    o_sds = opt_state_sds(opt, p_sds, p_axes, mesh, rules)
+    b_sds = batch_sds(cfg, shape, None, rules)
+
+    def add_replica(sds, extra=()):
+        spec = sds.sharding.spec if sds.sharding is not None else P()
+        new_spec = P("data", *tuple(spec))
+        return jax.ShapeDtypeStruct((n_replicas,) + sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, new_spec))
+
+    pr = jax.tree.map(add_replica, p_sds)
+    orr = jax.tree.map(add_replica, o_sds)
+    br = {k: jax.ShapeDtypeStruct(
+        (n_replicas, v.shape[0] // n_replicas) + v.shape[1:], v.dtype,
+        sharding=NamedSharding(mesh, P("data", None, *([None] * (len(v.shape) - 1)))))
+        for k, v in b_sds.items()}
+    inner, _ = make_diloco_inner_step(lm, opt, TrainConfig(), n_replicas)
+    with mesh:
+        lowered = jax.jit(inner, donate_argnums=(0, 1)).lower(
+            pr, orr, br, jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+        ctx = {"cfg": cfg, "shape": shape, "mesh": mesh, "rules": rules,
+               "optimizer": "adamw"}
+        r = analyze(lowered, compiled, ctx)
+    r["status"] = "ok"
+    r["variant"] = f"diloco_r{n_replicas}"
+    out = OUT / f"{arch}__train_4k__single-diloco.json"
+    out.write_text(json.dumps(r, indent=2))
+    print(f"[diloco] compute={r['t_compute_s']:.3f}s mem={r['t_memory_s']:.3f}s "
+          f"coll={r['t_collective_s']:.3f}s dom={r['dominant']}")
+    return r
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--select", action="store_true")
+    ap.add_argument("--drill", nargs="+")
+    ap.add_argument("--absorb", action="store_true")
+    ap.add_argument("--diloco", action="store_true")
+    ap.add_argument("--variant", nargs=3, metavar=("ARCH", "SHAPE", "TAG"))
+    ap.add_argument("--runtime", type=json.loads, default=None)
+    ap.add_argument("--rules", type=json.loads, default=None)
+    ap.add_argument("--serve-bf16", action="store_true")
+    args = ap.parse_args()
+    if args.select:
+        select()
+    if args.drill:
+        drill(args.drill[0], args.drill[1],
+              args.drill[2] if len(args.drill) > 2 else "bytes")
+    if args.absorb:
+        run_variant("deepseek-v2-236b", "decode_32k", "absorb",
+                    runtime_overrides={"mla_absorb": True})
+    if args.diloco:
+        run_diloco()
+    if args.variant:
+        run_variant(args.variant[0], args.variant[1], args.variant[2],
+                    runtime_overrides=args.runtime,
+                    rules_overrides=args.rules,
+                    serve_params_bf16=args.serve_bf16)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Roofline table builder: reads results/dryrun/*.json -> EXPERIMENTS table.
+
+Per (arch x shape x mesh): the three roofline terms, the dominant one,
+MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and bytes/device.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+
+def load_results(directory: str = "results/dryrun",
+                 mesh: str = "single") -> List[Dict]:
+    rows = []
+    for p in sorted(Path(directory).glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            rows.append(r)
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+    ratio = r.get("useful_flops_ratio") or 0.0
+    t_step = max(tc, tm, tl)
+    frac = (r["model_flops"] / (r["chips"] * 197e12)) / t_step if t_step else 0
+    return (f"| {r['arch']:22s} | {r['shape']:11s} | {tc:.3e} | {tm:.3e} | "
+            f"{tl:.3e} | {r['dominant']:10s} | {ratio:6.3f} | {frac:6.3f} |")
+
+
+HEADER = ("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+          "| dominant | 6ND/HLO | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def roofline_fraction(r: Dict) -> float:
+    """Model-FLOPs time at peak / modeled step time (max of terms)."""
+    t_step = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    ideal = r["model_flops"] / (r["chips"] * 197e12)
+    return ideal / t_step if t_step > 0 else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = load_results(args.dir, args.mesh)
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+    if rows:
+        fracs = sorted(((roofline_fraction(r), r["arch"], r["shape"])
+                        for r in rows))
+        print(f"\n# {len(rows)} cells; worst roofline fraction: "
+              f"{fracs[0][1]} {fracs[0][2]} = {fracs[0][0]:.4f}")
+        coll = sorted(((r["t_collective_s"] / max(max(r["t_compute_s"],
+                        r["t_memory_s"], r["t_collective_s"]), 1e-30),
+                        r["arch"], r["shape"]) for r in rows), reverse=True)
+        print(f"# most collective-bound: {coll[0][1]} {coll[0][2]} "
+              f"(coll share {coll[0][0]:.2f})")
+
+
+if __name__ == "__main__":
+    main()

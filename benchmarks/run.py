@@ -1,0 +1,75 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figures 1/3/4/5/6 reproduce the
+paper's CoCoA/CoCoA+ experiments on the synthetic MNIST stand-in; ernest/
+planner rows exercise the §3 models end-to-end; kernels/* are the Pallas-
+path microbenches; roofline/* summarizes the multi-pod dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small problem / fewer m values (CI mode)")
+    ap.add_argument("--skip-figures", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = []
+
+    if not args.skip_figures:
+        from benchmarks.context import get_context
+        from benchmarks import figures
+        ctx = get_context(quick=args.quick)
+        for fn in (figures.fig1a_time_per_iter,
+                   figures.fig1b_convergence_vs_m,
+                   figures.fig1c_algorithms,
+                   figures.fig3_model_fit,
+                   figures.fig4_loo_m,
+                   figures.fig5_forward_iters,
+                   figures.fig6_forward_time,
+                   figures.ernest_accuracy,
+                   figures.planner_e2e,
+                   figures.budget_query):
+            t0 = time.time()
+            try:
+                rows.extend(fn(ctx))
+            except Exception as e:  # noqa: BLE001
+                rows.append((f"{fn.__name__}/ERROR", 0.0,
+                             f"{type(e).__name__}:{e}"))
+                traceback.print_exc(file=sys.stderr)
+            print(f"# {fn.__name__} done in {time.time() - t0:.0f}s",
+                  file=sys.stderr, flush=True)
+
+    from benchmarks.kernels_micro import bench_kernels
+    try:
+        rows.extend(bench_kernels())
+    except Exception as e:  # noqa: BLE001
+        rows.append(("kernels/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
+    # roofline summary from dry-run artifacts (if the sweep has been run)
+    try:
+        from benchmarks.roofline import load_results, roofline_fraction
+        res = load_results()
+        for r in res:
+            rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                         max(r["t_compute_s"], r["t_memory_s"],
+                             r["t_collective_s"]) * 1e6,
+                         f"dom={r['dominant']};frac={roofline_fraction(r):.4f}"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("roofline/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Elastic training with the adaptive parallelism controller (§6).
+
+Trains with failure injection AND an AdaptiveController that refits the
+convergence model online; when the controller recommends a resize, the
+driver checkpoints, changes the data-parallel degree (global batch here),
+and resumes — the full elastic loop on CPU.
+
+  PYTHONPATH=src python examples/elastic_train.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.core import AdaptiveController, ErnestModel
+from repro.launch.train import Trainer, TrainerOptions
+from repro.runtime.failures import FailureInjector
+
+
+def main():
+    sys_model = ErnestModel().fit(
+        np.array([1, 2, 4, 8]), np.full(4, 1.0),
+        np.array([0.40, 0.22, 0.13, 0.09]))  # measured-ish step times
+    ctrl = AdaptiveController(
+        sys_model, target_gap=0.05, p_star=0.0, m_options=[1, 2, 4],
+        refit_every=15, min_observations=20, reshard_cost_s=1.0)
+
+    with tempfile.TemporaryDirectory() as td:
+        m = 1
+        opts = TrainerOptions(arch="stablelm-1.6b", smoke=True, steps=40,
+                              seq_len=64, global_batch=2 * m, log_every=0,
+                              ckpt_dir=td, ckpt_every=10,
+                              failure_injector=FailureInjector.at(17))
+        trainer = Trainer(opts)
+        step_budget = 120
+        while trainer.step < step_budget:
+            trainer.opts = opts
+            n = min(20, step_budget - trainer.step)
+            trainer.opts = opts.__class__(**{**opts.__dict__,
+                                             "steps": trainer.step + n})
+            trainer.tcfg = trainer.tcfg.__class__(
+                **{**trainer.tcfg.__dict__,
+                   "total_steps": step_budget})
+            trainer.run()
+            loss = trainer.history[-1][1]
+            decision = ctrl.observe(trainer.step, m, loss)
+            if decision and decision.resize:
+                print(f"[elastic] step {trainer.step}: resize m={m} -> "
+                      f"m={decision.target_m} ({decision.reason})")
+                m = decision.target_m
+                # checkpoint, rebuild at the new parallelism, restore
+                trainer._save(block=True)
+                new_opts = TrainerOptions(
+                    arch="stablelm-1.6b", smoke=True, steps=step_budget,
+                    seq_len=64, global_batch=2 * m, log_every=0,
+                    ckpt_dir=td, ckpt_every=10)
+                trainer = Trainer(new_opts)
+                trainer._maybe_restore()
+        print(f"done at step {trainer.step}, final loss "
+              f"{trainer.history[-1][1]:.3f}, resize decisions: "
+              f"{sum(1 for d in ctrl.decisions if d.resize)}")
+
+
+if __name__ == "__main__":
+    main()

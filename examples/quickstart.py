@@ -1,0 +1,50 @@
+"""Quickstart: the Hemingway loop in ~40 lines.
+
+Simulate CoCoA at a few cluster sizes, fit the system model f(m) and the
+convergence model g(i, m), combine into h(t, m) = g(t/f(m), m), and ask the
+planner the paper's two questions.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CombinedModel, ConvergenceData, ConvergenceModel,
+                        ErnestModel, Planner)
+from repro.optim import BSPCluster, ERMProblem, synthetic_mnist
+from repro.optim.simcluster import solve_reference
+
+# 1. a (synthetic-)MNIST linear SVM, the paper's workload
+X, y = synthetic_mnist(n=8_192, d=256, seed=0)
+problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-4, loss="hinge")
+p_star, _ = solve_reference(problem, iters=150)
+print(f"P* = {p_star:.6f}")
+
+# 2. profile a few cluster sizes (real convergence, modeled wall-clock)
+cluster = BSPCluster()
+ms = [1, 2, 4, 8, 16]
+sims = {m: cluster.simulate(problem, "cocoa", m, 40) for m in ms}
+for m in ms:
+    print(f"m={m:2d}: t_iter={sims[m].t_iter*1e3:7.1f} ms, "
+          f"final gap={sims[m].record.primal.min() - p_star:.2e}")
+
+# 3. fit f(m) (Ernest/NNLS) and g(i, m) (LassoCV over phi_j(i, m))
+sys_model = ErnestModel().fit(
+    np.asarray(ms, float), np.full(len(ms), problem.n, float),
+    np.asarray([sims[m].t_iter for m in ms]))
+curves = {m: np.minimum.accumulate(s.record.primal) for m, s in sims.items()}
+conv_model = ConvergenceModel().fit(
+    ConvergenceData.from_curves(curves, p_star - 1e-6, stop_gap=1e-5))
+print(f"f(m) coefficients: {sys_model.coefficients()}")
+print(f"g(i,m) R^2 = {conv_model.r2(ConvergenceData.from_curves(curves, p_star - 1e-6)):.4f}")
+
+# 4. plan: h(t, m) = g(t / f(m), m)
+combined = CombinedModel(sys_model, conv_model, data_size=problem.n,
+                         max_iters=10_000)
+planner = Planner({"cocoa": combined})
+d1 = planner.fastest_to_epsilon(1e-3, m_grid=ms)
+print(f"[query 1] eps=1e-3  -> use {d1.algorithm} on m={d1.m} "
+      f"(predicted {d1.predicted_time:.2f}s)")
+d2 = planner.best_within_budget(5.0, m_grid=ms)
+print(f"[query 2] t<=5s     -> use {d2.algorithm} on m={d2.m} "
+      f"(predicted objective {d2.predicted_value:.5f})")

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Defines a custom ~107M config (stablelm-family), trains with checkpointing
+and the full trainer stack.  On this 1-core CPU container a 107M model runs
+~1 step/minute, so the default invocation uses --scale 0.25 (a ~10M model,
+identical code path) for a few hundred steps; pass --scale 1 on real
+hardware.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.launch.train import Trainer, TrainerOptions
+
+
+def config_100m(scale: float = 1.0) -> ArchConfig:
+    d = max(int(512 * scale) // 64 * 64, 128)
+    return ArchConfig(
+        name=f"lm-100m-s{scale}",
+        family="dense",
+        n_layers=12 if scale >= 1 else 6,
+        d_model=d,
+        n_heads=max(d // 64, 2),
+        n_kv_heads=max(d // 64, 2),
+        head_dim=64,
+        d_ff=3 * d,
+        vocab_size=32_000 if scale >= 1 else 8_000,
+        period=(LayerSpec(mixer="attn", ffn="dense"),),
+        source="custom ~100M example",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=4)
+    args = ap.parse_args()
+    cfg = config_100m(args.scale)
+    n = cfg.param_count()
+    print(f"model: {cfg.name}: {n/1e6:.1f}M params")
+    with tempfile.TemporaryDirectory() as td:
+        opts = TrainerOptions(arch="stablelm-1.6b", smoke=True,
+                              steps=args.steps, seq_len=args.seq_len,
+                              global_batch=args.global_batch,
+                              ckpt_dir=td, ckpt_every=50, log_every=20)
+        trainer = Trainer(opts)
+        # swap in the custom config (the Trainer API takes arch ids; for a
+        # custom config we rebuild its model in place)
+        from repro.models.model import LM
+        from repro.models.runtime import Runtime
+        from repro.data.pipeline import SyntheticTokens
+        trainer.cfg = cfg
+        trainer.lm = LM(cfg, Runtime(remat="none", block_q=64, block_k=64))
+        trainer.data = SyntheticTokens(cfg.vocab_size, args.seq_len,
+                                       args.global_batch, seed=0)
+        trainer._build_state()
+        trainer._step_fn = trainer._make_step()
+        last = trainer.run()
+        losses = [l for _, l in trainer.history]
+        print(f"trained {trainer.step} steps: loss {losses[0]:.3f} -> "
+              f"{losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Hemingway's contribution: system model + convergence model + planner."""
+from repro.core.adaptive import AdaptiveController, ResizeDecision
+from repro.core.convergence import ConvergenceData, ConvergenceModel
+from repro.core.ernest import ErnestModel
+from repro.core.expdesign import Candidate, default_candidate_grid, greedy_d_optimal
+from repro.core.features import FeatureLibrary
+from repro.core.hemingway import CombinedModel, PlanDecision, Planner
+from repro.core.lasso import LassoFit, lasso_cv, lasso_fit, r2_score
+from repro.core.nnls import nnls, nnls_fit
+
+__all__ = [
+    "AdaptiveController",
+    "Candidate",
+    "CombinedModel",
+    "ConvergenceData",
+    "ConvergenceModel",
+    "ErnestModel",
+    "FeatureLibrary",
+    "LassoFit",
+    "PlanDecision",
+    "Planner",
+    "ResizeDecision",
+    "default_candidate_grid",
+    "greedy_d_optimal",
+    "lasso_cv",
+    "lasso_fit",
+    "nnls",
+    "nnls_fit",
+    "r2_score",
+]

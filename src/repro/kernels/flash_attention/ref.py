@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for flash attention (naive, materializes S x S).
+
+Only used by tests/benchmarks on small shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hk, Skv, D)
+    v: jnp.ndarray,  # (B, Hk, Skv, D)
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    kv_lens: Optional[jnp.ndarray] = None,  # (B,) float or int
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    assert hq % hk == 0
+    g = hq // hk
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hk, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * scale
+    kv_pos = jnp.arange(skv)
+    mask = jnp.ones((b, 1, 1, sq, skv), dtype=bool)
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        mask &= (q_pos[:, None] >= kv_pos[None, :])[None, None, None]
+    if kv_lens is not None:
+        valid = kv_pos[None, :] < kv_lens[:, None].astype(jnp.int32)  # (B, Skv)
+        mask &= valid[:, None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, vf) / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)

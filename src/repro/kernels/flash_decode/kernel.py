@@ -1,0 +1,104 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Grid = (B*H, n_kv_blocks); KV blocks stream through VMEM while the
+(head_dim,) fp32 accumulator + scalar running max/sum persist in scratch.
+Per-sequence valid lengths mask the tail block.  This is the single-chip
+building block; cross-chip KV-sequence sharding composes the per-shard
+(acc, m, l) partials with a psum (see ops.sharded_decode_attention and the
+GSPMD path in kernels/flash_attention/ops.decode_attention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref,
+                   *, sm_scale: float, block_k: int, n_kv: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (1, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)[0] * sm_scale
+    pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[0] = l_ref[0] * alpha + p.sum()
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p[None], v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+                       )[0].astype(o_ref.dtype)
+
+
+def flash_decode_pallas(
+    q: jnp.ndarray,        # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, H, S, D) (GQA: broadcast KV heads first)
+    v_cache: jnp.ndarray,  # (B, H, S, D)
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    sm_scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, s, d = k_cache.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    block_k = min(block_k, s)
+    pad = (-s) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k_cache.shape[2] // block_k
+    qf = q.reshape(b * h, 1, d)
+    kf = k_cache.reshape(b * h, -1, d)
+    vf = v_cache.reshape(b * h, -1, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), h)  # (B*H,)
+    kernel = functools.partial(_decode_kernel, sm_scale=scale,
+                               block_k=block_k, n_kv=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(b, h, d)

@@ -1,0 +1,37 @@
+"""jit'd wrappers for decode attention (kernel + jnp fallback + sharded)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import decode_attention
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+
+
+def decode_attention_auto(
+    q: jnp.ndarray,        # (B, Hq, D)
+    k_cache: jnp.ndarray,  # (B, Hk, S, D)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    block_k: int = 512,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Dispatch decode attention to the Pallas kernel (TPU) or the jnp path
+    (CPU / GSPMD-sharded caches)."""
+    if not use_pallas:
+        return decode_attention(q, k_cache, v_cache, lengths,
+                                sm_scale=sm_scale)
+    b, hq, d = q.shape
+    hk = k_cache.shape[1]
+    g = hq // hk
+    if g > 1:
+        k_cache = jnp.repeat(k_cache, g, axis=1)
+        v_cache = jnp.repeat(v_cache, g, axis=1)
+    return flash_decode_pallas(q, k_cache, v_cache, lengths,
+                               sm_scale=sm_scale, block_k=block_k,
+                               interpret=interpret)

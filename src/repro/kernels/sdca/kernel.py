@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for the CoCoA local SDCA inner loop.
+
+The paper's compute hot spot is "local learning": each worker runs H
+sequential dual-coordinate updates over its (n_local, d) shard.  On GPU this
+is a latency-bound pointer-chasing loop; the TPU adaptation keeps the whole
+shard tile + the local model vector v resident in VMEM and runs the
+sequential loop on-core — each update is one (d,)-dot + one (d,)-AXPY on the
+VPU, with zero HBM traffic between updates.
+
+Grid = (n_workers,): one program per worker (workers are embarrassingly
+parallel within a BSP round).  The ops wrapper falls back to the jnp scan
+(ref.py math) when the shard does not fit the VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sdca_kernel(x_ref, y_ref, a_ref, w_ref, idx_ref,
+                 a_out_ref, dw_ref, v_ref,
+                 *, h: int, sigma_prime: float, lam: float, n: float):
+    v_ref[...] = w_ref[0].astype(jnp.float32)
+    a_out_ref[0] = a_ref[0]
+
+    def step(t, _):
+        j = idx_ref[0, t]
+        x = pl.load(x_ref, (0, pl.dslice(j, 1), slice(None)))[0].astype(
+            jnp.float32)                                    # (d,)
+        yj = pl.load(y_ref, (0, pl.dslice(j, 1)))[0].astype(jnp.float32)
+        aj = pl.load(a_out_ref, (0, pl.dslice(j, 1)))[0].astype(jnp.float32)
+        xx = jnp.sum(x * x)
+        q = sigma_prime * xx / (lam * n)
+        margin = yj * jnp.sum(v_ref[...] * x)
+        delta_raw = jnp.where(q > 0, (1.0 - margin) / jnp.maximum(q, 1e-30),
+                              0.0)
+        a_new = jnp.clip(aj + delta_raw, 0.0, 1.0)
+        delta = jnp.where(xx > 0, a_new - aj, 0.0)
+        pl.store(a_out_ref, (0, pl.dslice(j, 1)),
+                 (aj + delta)[None].astype(a_out_ref.dtype))
+        v_ref[...] = v_ref[...] + sigma_prime * delta * yj * x / (lam * n)
+        return 0
+
+    jax.lax.fori_loop(0, h, step, 0)
+    dw_ref[0] = ((v_ref[...] - w_ref[0].astype(jnp.float32))
+                 / sigma_prime).astype(dw_ref.dtype)
+
+
+def local_sdca_pallas(
+    X: jnp.ndarray,     # (m, nl, d) worker shards
+    y: jnp.ndarray,     # (m, nl)
+    a: jnp.ndarray,     # (m, nl)
+    w: jnp.ndarray,     # (d,)
+    idx: jnp.ndarray,   # (m, H)
+    sigma_prime: float,
+    lam: float,
+    n: float,
+    *,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (new a (m, nl), dw (m, d))."""
+    m, nl, d = X.shape
+    h = idx.shape[1]
+    w_b = jnp.broadcast_to(w[None], (m, d))
+    kernel = functools.partial(_sdca_kernel, h=h, sigma_prime=float(sigma_prime),
+                               lam=float(lam), n=float(n))
+    a_out, dw = pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, nl, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nl), lambda i: (i, 0)),
+            pl.BlockSpec((1, nl), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, h), lambda i: (i, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nl), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nl), a.dtype),
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(X, y, a, w_b, idx.astype(jnp.int32))
+    return a_out, dw

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the local SDCA inner loop (kernel or jnp scan)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdca.kernel import local_sdca_pallas
+from repro.kernels.sdca.ref import local_sdca_ref
+
+# VMEM budget (bytes) for the per-worker shard tile on v5e (~16 MiB usable)
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def local_sdca(
+    X: jnp.ndarray,     # (m, nl, d)
+    y: jnp.ndarray,
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    idx: jnp.ndarray,   # (m, H)
+    sigma_prime: float,
+    lam: float,
+    n: float,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m, nl, d = X.shape
+    fits_vmem = (nl * d + 2 * nl + 2 * d) * 4 <= VMEM_BUDGET
+    if use_pallas and fits_vmem:
+        return local_sdca_pallas(X, y, a, w, idx, sigma_prime, lam, n,
+                                 interpret=interpret)
+    new_a, dw = jax.vmap(
+        lambda Xk, yk, ak, ik: local_sdca_ref(Xk, yk, ak, w, ik,
+                                              sigma_prime, lam, n)
+    )(X, y, a, idx)
+    return new_a, dw

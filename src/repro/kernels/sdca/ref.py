@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the local SDCA inner loop (hinge loss).
+
+Identical math to repro.optim.cocoa._local_sdca for a single worker; the
+Pallas kernel (kernel.py) is validated against this.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_sdca_ref(
+    X: jnp.ndarray,     # (nl, d)
+    y: jnp.ndarray,     # (nl,)
+    a: jnp.ndarray,     # (nl,) dual vars (a = alpha * y in [0, 1])
+    w: jnp.ndarray,     # (d,) current global model
+    idx: jnp.ndarray,   # (H,) coordinate order
+    sigma_prime: float,
+    lam: float,
+    n: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (new a, dw)."""
+
+    def step(carry, j):
+        a, v = carry
+        x = X[j]
+        yj = y[j]
+        aj = a[j]
+        xx = jnp.dot(x, x)
+        q = sigma_prime * xx / (lam * n)
+        margin = yj * jnp.dot(v, x)
+        delta_raw = jnp.where(q > 0, (1.0 - margin) / jnp.maximum(q, 1e-30), 0.0)
+        a_new = jnp.clip(aj + delta_raw, 0.0, 1.0)
+        delta = jnp.where(xx > 0, a_new - aj, 0.0)
+        a = a.at[j].add(delta)
+        v = v + sigma_prime * delta * yj * x / (lam * n)
+        return (a, v), None
+
+    (a, v), _ = jax.lax.scan(step, (a, w), idx)
+    return a, (v - w) / sigma_prime

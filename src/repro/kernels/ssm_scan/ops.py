@@ -1,0 +1,94 @@
+"""Chunked selective scan (Mamba-1) — the TPU-adapted formulation.
+
+Instead of a length-S sequential scan (latency-bound) or one big
+associative scan (memory-bound: O(S * Dn * N) live temporaries), we scan
+sequentially over chunks of `chunk` timesteps and run an associative scan
+*within* each chunk.  Peak temporary memory is O(chunk * Dn * N) per batch
+element and the sequential depth is S / chunk.  The chunk body is
+rematerialized (jax.checkpoint) so the backward pass does not store the
+per-step (Bt, chunk, Dn, N) products.
+
+The Pallas kernel (kernel.py) implements the same chunking with the
+(chunk, Dn_block) tiles resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def selective_scan(
+    x: jnp.ndarray,   # (Bt, S, Dn)
+    dt: jnp.ndarray,  # (Bt, S, Dn) positive
+    A: jnp.ndarray,   # (Dn, N) negative
+    B: jnp.ndarray,   # (Bt, S, N)
+    C: jnp.ndarray,   # (Bt, S, N)
+    D: jnp.ndarray,   # (Dn,)
+    h0: Optional[jnp.ndarray] = None,
+    *,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    bt, s, dn = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        padder = lambda z: jnp.pad(z, [(0, 0), (0, pad)] + [(0, 0)] * (z.ndim - 2))
+        x_, dt_, B_, C_ = map(padder, (x, dt, B, C))
+    else:
+        x_, dt_, B_, C_ = x, dt, B, C
+    nc = x_.shape[1] // chunk
+    resh = lambda z: z.reshape(bt, nc, chunk, *z.shape[2:]).swapaxes(0, 1)
+    xc, dtc, Bc, Cc = map(resh, (x_, dt_, B_, C_))  # (nc, Bt, chunk, ...)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+    h_init = (jnp.zeros((bt, dn, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_body(h, inputs):
+        xi, dti, Bi, Ci = inputs
+        xi = xi.astype(jnp.float32)
+        dti = dti.astype(jnp.float32)
+        a = jnp.exp(dti[..., None] * Af[None, None])          # (Bt,c,Dn,N)
+        bx = (dti * xi)[..., None] * Bi.astype(jnp.float32)[:, :, None, :]
+        a_cum, s_cum = lax.associative_scan(_combine, (a, bx), axis=1)
+        hc = a_cum * h[:, None] + s_cum                        # (Bt,c,Dn,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hc, Ci.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        y = y + Df[None, None] * xi
+        return hc[:, -1], y.astype(x.dtype)
+
+    h_last, ys = lax.scan(chunk_body, h_init, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(bt, nc * chunk, dn)
+    return y[:, :s], h_last
+
+
+def selective_scan_step(
+    x_t: jnp.ndarray,   # (Bt, Dn)
+    dt_t: jnp.ndarray,  # (Bt, Dn)
+    A: jnp.ndarray,     # (Dn, N)
+    B_t: jnp.ndarray,   # (Bt, N)
+    C_t: jnp.ndarray,   # (Bt, N)
+    D: jnp.ndarray,     # (Dn,)
+    h: jnp.ndarray,     # (Bt, Dn, N) fp32 state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step: O(Dn * N) per token."""
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    bx = (dtf * xf)[..., None] * B_t.astype(jnp.float32)[:, None, :]
+    h_new = a * h + bx
+    y = jnp.einsum("bdn,bn->bd", h_new, C_t.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None] * xf
+    return y.astype(x_t.dtype), h_new

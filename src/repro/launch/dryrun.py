@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements: jax locks the device
+count at first initialization, and smoke tests / benches must NOT see 512
+devices (this module is the only place the flag is set).
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. builds ShapeDtypeStructs for params / optimizer state / inputs with
+     NamedShardings from the partitioning rules,
+  3. ``jax.jit(step).lower(...).compile()`` — proving the distribution
+     config is coherent (no sharding mismatches, compilable collectives),
+  4. records memory_analysis / cost_analysis / per-device collective bytes
+     into a JSON consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k \
+      --mesh single --out results/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config
+from repro.configs.base import SHAPES_BY_NAME, ShapeSpec
+from repro.dist.hlo_analysis import collective_bytes, collective_wire_bytes
+from repro.dist.hlo_costs import analyze_hlo
+from repro.dist.partitioning import Rules
+from repro.launch.inputs import (
+    batch_sds,
+    decode_sds,
+    opt_state_sds,
+    params_sds,
+    rules_for_cell,
+    text_seq_len,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.models.runtime import Runtime
+from repro.training.optimizers import default_optimizer_for, get_optimizer
+from repro.training.trainer import TrainConfig, make_train_step
+
+# TPU v5e constants (roofline)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link
+
+
+def _mesh_chips(mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def _runtime_for(cfg, mesh, rules) -> Runtime:
+    return Runtime(mesh=mesh, rules=rules, remat="full",
+                   mla_absorb=False)  # paper-faithful baseline: no absorption
+
+
+def model_flops(cfg, shape: ShapeSpec) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * text_seq_len(cfg, shape)
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * text_seq_len(cfg, shape)
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_overrides: dict | None = None,
+               runtime_overrides: dict | None = None,
+               serve_params_bf16: bool = False):
+    """Returns (lowered, compiled, context dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = Rules.default(mesh)
+    if rules_overrides:
+        rules = rules.override(**rules_overrides)
+    rules = rules_for_cell(rules, shape, mesh)
+    rt = _runtime_for(cfg, mesh, rules)
+    if runtime_overrides:
+        rt = dataclasses.replace(rt, **runtime_overrides)
+    lm = LM(cfg, rt)
+    p_sds, p_axes = params_sds(lm, mesh, rules)
+    if serve_params_bf16 and shape.kind != "train":
+        # serving checkpoints ship in bf16 (half the weight-streaming bytes)
+        p_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype,
+                sharding=s.sharding), p_sds)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_name = default_optimizer_for(cfg.param_count())
+            opt = get_optimizer(opt_name)
+            o_sds = opt_state_sds(opt, p_sds, p_axes, mesh, rules)
+            b_sds = batch_sds(cfg, shape, mesh, rules)
+            step = make_train_step(lm, opt, TrainConfig())
+            p_sh = jax.tree.map(lambda s: s.sharding, p_sds,
+                                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            o_sh = jax.tree.map(lambda s: s.sharding, o_sds,
+                                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, None, None),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = fn.lower(p_sds, o_sds, b_sds, step_sds)
+            extra = {"optimizer": opt_name}
+        elif shape.kind == "prefill":
+            b_sds = batch_sds(cfg, shape, mesh, rules)
+
+            def prefill_fn(params, batch):
+                return lm.prefill(params, batch["tokens"],
+                                  batch.get("frontend_embeds"))
+
+            fn = jax.jit(prefill_fn)
+            lowered = fn.lower(p_sds, b_sds)
+            extra = {}
+        else:  # decode
+            tok_sds, len_sds, cache_sds = decode_sds(cfg, shape, mesh, rules, lm)
+            cache_sh = jax.tree.map(
+                lambda s: s.sharding, cache_sds,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            fn = jax.jit(lm.decode_step,
+                         in_shardings=(
+                             jax.tree.map(lambda s: s.sharding, p_sds,
+                                          is_leaf=lambda x: isinstance(
+                                              x, jax.ShapeDtypeStruct)),
+                             None, None, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(3,))
+            lowered = fn.lower(p_sds, tok_sds, len_sds, cache_sds)
+            extra = {}
+        compiled = lowered.compile()
+    ctx = {"cfg": cfg, "shape": shape, "mesh": mesh, "rules": rules,
+           **extra}
+    return lowered, compiled, ctx
+
+
+def analyze(lowered, compiled, ctx) -> dict:
+    cfg, shape, mesh = ctx["cfg"], ctx["shape"], ctx["mesh"]
+    chips = _mesh_chips(mesh)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware costs (cost_analysis counts while bodies once; our
+    # parser multiplies by static loop bounds — see dist/hlo_costs.py)
+    parsed = analyze_hlo(hlo)
+    flops_per_device = parsed.flops
+    bytes_per_device = parsed.bytes_accessed
+    coll_per_device = parsed.collective_operand_bytes
+    wire_per_device = parsed.collective_wire_bytes
+    breakdown = {k: int(v) for k, v in parsed.per_kind_wire.items()}
+    breakdown_wire = breakdown
+    # spec formulas use global sums over chips
+    hlo_flops = flops_per_device * chips
+    hlo_bytes = bytes_per_device * chips
+    coll_bytes = float(wire_per_device) * chips  # ring-model wire bytes
+    t_compute = hlo_flops / (chips * PEAK_FLOPS)
+    t_memory = hlo_bytes / (chips * HBM_BW)
+    t_coll = coll_bytes / (chips * LINK_BW)
+    mf = model_flops(cfg, shape)
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1])[0]
+    mem_fields = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_fields[attr] = int(getattr(mem, attr, -1))
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "chips": chips,
+        "optimizer": ctx.get("optimizer"),
+        "flops_per_device": flops_per_device,
+        "bytes_per_device": bytes_per_device,
+        "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        "n_while_loops": parsed.n_whiles,
+        "collective_bytes_per_device": int(coll_per_device),
+        "collective_wire_bytes_per_device": int(wire_per_device),
+        "collective_breakdown_per_device": breakdown,
+        "collective_wire_breakdown_per_device": breakdown_wire,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / hlo_flops if hlo_flops else None,
+        "memory_analysis": mem_fields,
+        "n_params": cfg.param_count(),
+        "n_params_active": cfg.param_count(active_only=True),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             force: bool = False, rules_overrides=None,
+             runtime_overrides=None, tag: str = "",
+             serve_params_bf16: bool = False) -> dict:
+    multi = mesh_kind == "multi"
+    suffix = f"-{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    t0 = time.time()
+    try:
+        lowered, compiled, ctx = lower_cell(
+            arch, shape_name, multi, rules_overrides, runtime_overrides,
+            serve_params_bf16=serve_params_bf16)
+        result = analyze(lowered, compiled, ctx)
+        result["status"] = "ok"
+        result["compile_seconds"] = time.time() - t0
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        result = {"arch": arch, "shape": shape_name, "mesh_kind": mesh_kind,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:],
+                  "compile_seconds": time.time() - t0}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    for arch, shape in cells:
+        for mk in meshes:
+            r = run_cell(arch, shape, mk, out_dir, force=args.force)
+            status = r.get("status")
+            if status == "ok":
+                print(f"[ok]   {arch:24s} {shape:12s} {mk:6s} "
+                      f"compute={r['t_compute_s']:.3e}s "
+                      f"mem={r['t_memory_s']:.3e}s "
+                      f"coll={r['t_collective_s']:.3e}s "
+                      f"dom={r['dominant']:10s} "
+                      f"({r['compile_seconds']:.0f}s compile)", flush=True)
+            else:
+                print(f"[FAIL] {arch:24s} {shape:12s} {mk:6s} "
+                      f"{r.get('error', '?')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh, rules, lm)`` returns the exact pytree the
+lowered step function consumes, with NamedShardings attached — the pattern
+the dry-run uses for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist.partitioning import Rules
+from repro.models.model import LM
+
+
+def text_seq_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Frontend-stub archs spend n_frontend_tokens of the sequence budget."""
+    if shape.kind == "train" or shape.kind == "prefill":
+        return shape.seq_len - cfg.n_frontend_tokens
+    return shape.seq_len
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def batch_sds(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: Rules) -> Dict:
+    """Train/prefill batch ShapeDtypeStructs."""
+    b = shape.global_batch
+    s_text = text_seq_len(cfg, shape)
+    sh = lambda axes, shape: (None if mesh is None
+                              else rules.act_sharding(mesh, axes, shape))
+    out: Dict = {"tokens": _sds((b, s_text), jnp.int32,
+                                sh(("batch", "seq"), (b, s_text)))}
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s_text), jnp.int32,
+                             sh(("batch", "seq"), (b, s_text)))
+    if cfg.frontend != "none":
+        fshape = (b, cfg.n_frontend_tokens, cfg.d_model)
+        out["frontend_embeds"] = _sds(
+            fshape, jnp.float32, sh(("batch", "frontend_seq", None), fshape))
+    return out
+
+
+def decode_sds(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: Rules,
+               lm: LM) -> Tuple:
+    """(tokens, lengths, cache) ShapeDtypeStructs for serve_step."""
+    from repro.dist.treeutil import map_with_axes
+
+    b = shape.global_batch
+    sh = lambda axes, shape: (None if mesh is None
+                              else rules.act_sharding(mesh, axes, shape))
+    tokens = _sds((b,), jnp.int32, sh(("batch",), (b,)))
+    lengths = _sds((b,), jnp.int32, sh(("batch",), (b,)))
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(b, shape.seq_len))
+    cache_axes = lm.cache_axes()
+
+    def attach(sds_leaf, axes_leaf):
+        return _sds(sds_leaf.shape, sds_leaf.dtype,
+                    None if mesh is None
+                    else rules.act_sharding(mesh, axes_leaf, sds_leaf.shape))
+
+    cache = map_with_axes(attach, cache_shapes, cache_axes)
+    return tokens, lengths, cache
+
+
+def params_sds(lm: LM, mesh, rules: Rules):
+    """(params SDS with shardings, axes tree)."""
+    from repro.dist.treeutil import map_with_axes
+
+    values_sds = lm.param_shapes()
+    axes = lm.param_axes()
+
+    def attach(sds_leaf, ax):
+        return _sds(sds_leaf.shape, sds_leaf.dtype,
+                    None if mesh is None
+                    else rules.param_sharding(mesh, ax, sds_leaf.shape))
+
+    return map_with_axes(attach, values_sds, axes), axes
+
+
+def opt_state_sds(opt, params_sds_tree, param_axes, mesh, rules: Rules):
+    from repro.dist.treeutil import map_with_axes
+
+    state_sds = jax.eval_shape(opt.init, params_sds_tree)
+    state_axes = opt.init_axes(param_axes)
+
+    def attach(sds_leaf, ax):
+        return _sds(sds_leaf.shape, sds_leaf.dtype,
+                    None if mesh is None
+                    else rules.param_sharding(mesh, ax, sds_leaf.shape))
+
+    return map_with_axes(attach, state_sds, state_axes)
+
+
+def rules_for_cell(base: Rules, shape: ShapeSpec, mesh) -> Rules:
+    """Per-cell sharding adjustments.
+
+    Long-context decode (global_batch < data-axis size): batch can't fill the
+    data axis, so shard the KV-cache sequence over it instead (flash-decode
+    combine falls out of GSPMD's partial softmax reductions)."""
+    if shape.kind == "decode" and mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        data = sizes.get("data", 1) * sizes.get("pod", 1)
+        if shape.global_batch < data:
+            return base.override(acts={
+                "batch": None,
+                "cache_batch": None,
+                "cache_seq": ("pod", "data"),
+            })
+    return base

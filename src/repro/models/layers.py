@@ -1,0 +1,121 @@
+"""Shared model layers: norms, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Annotated, ann
+
+
+def cast_to(x: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    return x.astype(jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int) -> Annotated:
+    return ann(jnp.ones((dim,), jnp.float32), "norm")
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (NeoX half-rotation, partial rotary supported)
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jnp.ndarray, rot_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) int -> cos/sin of shape (..., S, rot_dim//2)."""
+    half = rot_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, rotary_pct: float = 1.0,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    rot_dim = int(d * rotary_pct)
+    rot_dim -= rot_dim % 2
+    if rot_dim == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    cos, sin = rope_angles(positions, rot_dim, theta)  # (B?, S, rot/2)
+    if cos.ndim == 2:  # (S, rot/2) -> broadcast batch
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :].astype(jnp.float32)  # (B, S, 1, rot/2)
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    half = rot_dim // 2
+    x1 = x_rot[..., :half].astype(jnp.float32)
+    x2 = x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_ff = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": ann(jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+                      "embed", "mlp"),
+        "w_up": ann(jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in,
+                    "embed", "mlp"),
+        "w_down": ann(jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_ff,
+                      "mlp", "embed"),
+    }
+
+
+def apply_mlp(params, x: jnp.ndarray, dtype: str, constrain_fn=None) -> jnp.ndarray:
+    xc = cast_to(x, dtype)
+    h = jax.nn.silu(xc @ cast_to(params["w_gate"], dtype)) * (
+        xc @ cast_to(params["w_up"], dtype))
+    if constrain_fn is not None:
+        h = constrain_fn(h, ("batch", "seq", "act_mlp"))
+    return h @ cast_to(params["w_down"], dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+def init_embedding(key: jax.Array, vocab: int, d_model: int) -> Annotated:
+    emb = jax.random.normal(key, (vocab, d_model), jnp.float32) / math.sqrt(d_model)
+    return ann(emb, "vocab", "embed")
+
+
+def init_lm_head(key: jax.Array, d_model: int, vocab: int) -> Annotated:
+    w = jax.random.normal(key, (d_model, vocab), jnp.float32) / math.sqrt(d_model)
+    return ann(w, "embed", "vocab")
+
+
+def embed_tokens(embed: jnp.ndarray, tokens: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    return cast_to(embed, dtype)[tokens]
+
+
+def lm_logits(head: jnp.ndarray, x: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    return cast_to(x, dtype) @ cast_to(head, dtype)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token CE. logits (..., V) (vocab may be sharded; reductions are
+    GSPMD-safe), labels (...,) int32.  fp32 log-sum-exp."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

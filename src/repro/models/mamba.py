@@ -1,0 +1,150 @@
+"""Mamba-1 block (selective SSM) — falcon-mamba / jamba mixer.
+
+Uses the chunked selective scan from kernels/ssm_scan (TPU-adapted: bounded
+VMEM working set, sequential only across chunks).  Decode keeps a constant
+O(d_inner * d_state) recurrent state + (d_conv-1) conv taps per sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.kernels.ssm_scan.ops import selective_scan, selective_scan_step
+from repro.models.layers import cast_to
+from repro.models.param import ann
+
+
+def init_mamba(key: jax.Array, cfg: ArchConfig) -> Dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    n = mc.d_state
+    keys = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init_std = dtr ** -0.5
+    return {
+        "in_proj": ann(jax.random.normal(keys[0], (d, 2 * di), jnp.float32)
+                       / math.sqrt(d), "embed", "mamba_inner"),
+        "conv_w": ann(jax.random.normal(keys[1], (di, mc.d_conv), jnp.float32)
+                      / math.sqrt(mc.d_conv), "mamba_inner", "conv"),
+        "conv_b": ann(jnp.zeros((di,), jnp.float32), "mamba_inner"),
+        "x_proj": ann(jax.random.normal(keys[2], (di, dtr + 2 * n), jnp.float32)
+                      / math.sqrt(di), "mamba_inner", "lora"),
+        "dt_w": ann(jax.random.uniform(keys[3], (dtr, di), jnp.float32,
+                                       -dt_init_std, dt_init_std),
+                    "dt_rank", "mamba_inner"),
+        "dt_b": ann(jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(keys[4], (di,), jnp.float32)
+                    * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)))),
+            "mamba_inner"),
+        "A_log": ann(jnp.log(a_init), "mamba_inner", "ssm_state"),
+        "D": ann(jnp.ones((di,), jnp.float32), "mamba_inner"),
+        "out_proj": ann(jax.random.normal(keys[5], (di, d), jnp.float32)
+                        / math.sqrt(di), "mamba_inner", "embed"),
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> Dict:
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, di, mc.d_conv - 1), jnp.dtype(cfg.dtype)),
+    }
+
+
+MAMBA_CACHE_AXES = {
+    "h": ("cache_batch", "mamba_inner", None),
+    "conv": ("cache_batch", "mamba_inner", None),
+}
+
+
+def _split_xdb(p: Dict, x_in: jnp.ndarray, cfg: ArchConfig):
+    """x_in (B,S,di) -> dt (B,S,di), B (B,S,N), C (B,S,N)."""
+    mc = cfg.mamba
+    dtr = mc.resolved_dt_rank(cfg.d_model)
+    n = mc.d_state
+    dt_ = cfg.dtype
+    xdb = x_in @ cast_to(p["x_proj"], dt_)
+    dt_raw, b_ssm, c_ssm = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_raw @ cast_to(p["dt_w"], dt_)).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32))
+    return dt, b_ssm, c_ssm
+
+
+def apply_mamba(
+    p: Dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    mode: str,  # "train" | "prefill"
+    constrain_fn=None,
+    scan_chunk: int = 128,
+) -> Tuple[jnp.ndarray, Dict]:
+    mc = cfg.mamba
+    dt_ = cfg.dtype
+    b, s, _ = x.shape
+    di = mc.expand * cfg.d_model
+    xz = cast_to(x, dt_) @ cast_to(p["in_proj"], dt_)
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,S,di)
+    if constrain_fn is not None:
+        x_in = constrain_fn(x_in, ("batch", "seq", "act_mamba"))
+        z = constrain_fn(z, ("batch", "seq", "act_mamba"))
+    # causal depthwise conv over S
+    conv_w = cast_to(p["conv_w"], dt_)  # (di, cw)
+    rhs = conv_w.T[:, None, :]  # (cw, 1, di)
+    x_conv = lax.conv_general_dilated(
+        x_in, rhs, window_strides=(1,), padding=[(mc.d_conv - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=di)
+    x_conv = jax.nn.silu(x_conv + cast_to(p["conv_b"], dt_)[None, None])
+    dt, b_ssm, c_ssm = _split_xdb(p, x_conv, cfg)
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_last = selective_scan(
+        x_conv, dt, a_neg, b_ssm, c_ssm, p["D"].astype(jnp.float32),
+        chunk=scan_chunk)
+    y = y * jax.nn.silu(z)
+    out = y @ cast_to(p["out_proj"], dt_)
+    cache = None
+    if mode == "prefill":
+        conv_tail = x_in[:, -(mc.d_conv - 1):, :].transpose(0, 2, 1)  # (B,di,cw-1)
+        cache = {"h": h_last, "conv": conv_tail.astype(jnp.dtype(cfg.dtype))}
+    return out, cache
+
+
+def apply_mamba_decode(
+    p: Dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    cfg: ArchConfig,
+    cache: Dict,
+    *,
+    constrain_fn=None,
+) -> Tuple[jnp.ndarray, Dict]:
+    mc = cfg.mamba
+    dt_ = cfg.dtype
+    xz = cast_to(x[:, 0], dt_) @ cast_to(p["in_proj"], dt_)  # (B, 2di)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # conv over [state, x_in]
+    conv_w = cast_to(p["conv_w"], dt_)  # (di, cw)
+    window = jnp.concatenate([cache["conv"].astype(dt_), x_in[..., None]], axis=-1)
+    x_conv = jnp.sum(window * conv_w[None], axis=-1) + cast_to(p["conv_b"], dt_)[None]
+    x_conv = jax.nn.silu(x_conv)
+    dt, b_ssm, c_ssm = _split_xdb(p, x_conv[:, None, :], cfg)
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_new = selective_scan_step(
+        x_conv, dt[:, 0], a_neg, b_ssm[:, 0], c_ssm[:, 0],
+        p["D"].astype(jnp.float32), cache["h"])
+    y = y * jax.nn.silu(z)
+    out = y @ cast_to(p["out_proj"], dt_)
+    new_conv = window[..., 1:].astype(cache["conv"].dtype)
+    if constrain_fn is not None:
+        h_new = constrain_fn(h_new, MAMBA_CACHE_AXES["h"])
+        new_conv = constrain_fn(new_conv, MAMBA_CACHE_AXES["conv"])
+    return out[:, None, :], {"h": h_new, "conv": new_conv}

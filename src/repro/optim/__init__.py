@@ -1,0 +1,20 @@
+"""Distributed optimization algorithms modeled by Hemingway."""
+from repro.optim.cocoa import CocoaConfig, RunRecord, run_cocoa
+from repro.optim.lbfgs import LBFGSConfig, run_lbfgs
+from repro.optim.problems import ERMProblem, make_mnist_svm, synthetic_mnist
+from repro.optim.sgd import (
+    GDConfig,
+    LocalSGDConfig,
+    SGDConfig,
+    run_gd,
+    run_local_sgd,
+    run_minibatch_sgd,
+)
+from repro.optim.simcluster import (
+    ALGORITHMS,
+    BSPCluster,
+    CommModel,
+    SimResult,
+    run_algorithm,
+    solve_reference,
+)

@@ -1,0 +1,135 @@
+"""CoCoA [NIPS'14] and CoCoA+ [ICML'15] — the paper's main subjects.
+
+Data-parallel dual coordinate ascent: each of the m workers runs H local
+SDCA steps on its own partition against a local view
+v = w + sigma' * (local delta), then the delta-w's are combined:
+
+  * CoCoA   (gamma = 1/m "averaging", sigma' = 1):  w += mean_k dw_k
+  * CoCoA+  (gamma = 1  "adding",    sigma' = m):   w += sum_k dw_k
+
+Convergence genuinely degrades as m grows (fewer, more local updates per
+round) — the behavior Hemingway models (Fig 1b).  Workers are vmapped; on a
+real mesh the same functions run under shard_map with a psum (see
+repro.optim.simcluster.BSPCluster).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.problems import ERMProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class CocoaConfig:
+    n_workers: int
+    outer_iters: int = 100
+    local_iters: Optional[int] = None  # default: one local epoch (n/m steps)
+    plus: bool = False                 # CoCoA+ (adding) vs CoCoA (averaging)
+    seed: int = 0
+
+
+def partition(X: jnp.ndarray, y: jnp.ndarray, m: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shard (n, d) -> (m, n_local, d), zero-padding the tail (padded rows
+    have ||x|| = 0 and are skipped by the update's curvature guard)."""
+    n, d = X.shape
+    nl = -(-n // m)
+    pad = nl * m - n
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    yp = jnp.pad(y, (0, pad), constant_values=1.0)
+    return Xp.reshape(m, nl, d), yp.reshape(m, nl)
+
+
+def _local_sdca(problem_static, X_k, y_k, a_k, w, idx, sigma_prime, lam, n):
+    """H local SDCA steps on one worker. Returns (a_k, dw_k)."""
+    loss, gamma_sm = problem_static
+
+    def step(carry, j):
+        a, v = carry
+        x = X_k[j]
+        yj = y_k[j]
+        aj = a[j]
+        xx = jnp.dot(x, x)
+        q = sigma_prime * xx / (lam * n)
+        margin = yj * jnp.dot(v, x)
+        if loss == "smooth_hinge":
+            delta_raw = (1.0 - margin - gamma_sm * aj) / (q + gamma_sm)
+        else:  # hinge
+            delta_raw = jnp.where(q > 0, (1.0 - margin) / jnp.maximum(q, 1e-30),
+                                  0.0)
+        a_new = jnp.clip(aj + delta_raw, 0.0, 1.0)
+        delta = jnp.where(xx > 0, a_new - aj, 0.0)
+        a = a.at[j].add(delta)
+        v = v + sigma_prime * delta * yj * x / (lam * n)
+        return (a, v), None
+
+    (a_k, v), _ = jax.lax.scan(step, (a_k, w), idx)
+    dw_k = (v - w) / sigma_prime
+    return a_k, dw_k
+
+
+@partial(jax.jit, static_argnums=(0, 5, 6, 7))
+def cocoa_outer_step(problem_static, Xs, ys, a, w, plus: bool, lam_n,
+                     local_iters, key):
+    """One BSP round; Xs (m, nl, d), a (m, nl)."""
+    m, nl, _ = Xs.shape
+    lam, n = lam_n
+    h = local_iters or nl
+    sigma_prime = float(m) if plus else 1.0
+    keys = jax.random.split(key, m)
+    if h <= nl:
+        idx = jax.vmap(lambda k: jax.random.permutation(k, nl)[:h])(keys)
+    else:
+        idx = jax.vmap(lambda k: jax.random.randint(k, (h,), 0, nl))(keys)
+    a_new, dw = jax.vmap(
+        lambda Xk, yk, ak, ik: _local_sdca(
+            problem_static, Xk, yk, ak, w, ik, sigma_prime, lam, n)
+    )(Xs, ys, a, idx)
+    w_new = w + (jnp.sum(dw, 0) if plus else jnp.mean(dw, 0))
+    return a_new, w_new
+
+
+@dataclasses.dataclass
+class RunRecord:
+    primal: np.ndarray
+    dual: np.ndarray
+    gap: np.ndarray
+    w: np.ndarray
+    compute_seconds: float  # total measured compute across all simulated workers
+
+
+def run_cocoa(problem: ERMProblem, cfg: CocoaConfig,
+              record_every: int = 1) -> RunRecord:
+    import time
+
+    m = cfg.n_workers
+    Xs, ys = partition(problem.X, problem.y, m)
+    nl = Xs.shape[1]
+    a = jnp.zeros((m, nl), jnp.float32)
+    w = jnp.zeros((problem.d,), jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    problem_static = (problem.loss, problem.smooth_gamma)
+    lam_n = (problem.lam, float(problem.n))
+
+    primal, dual, gap = [], [], []
+    t_compute = 0.0
+    for it in range(cfg.outer_iters):
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        a, w = cocoa_outer_step(problem_static, Xs, ys, a, w, cfg.plus,
+                                lam_n, cfg.local_iters, sub)
+        w.block_until_ready()
+        t_compute += time.perf_counter() - t0
+        if it % record_every == 0 or it == cfg.outer_iters - 1:
+            a_flat = a.reshape(-1)[: problem.n]
+            primal.append(float(problem.primal(w)))
+            dual.append(float(problem.dual(a_flat)))
+            gap.append(primal[-1] - dual[-1])
+    return RunRecord(np.asarray(primal), np.asarray(dual), np.asarray(gap),
+                     np.asarray(w), t_compute)

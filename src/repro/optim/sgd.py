@@ -1,0 +1,183 @@
+"""Mini-batch SGD, local-update SGD (Splash-like), and full GD baselines.
+
+The paper compares CoCoA/CoCoA+ against parallel SGD with local updates and
+Splash (Fig 1c); these are those baselines, vmapped over BSP workers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.cocoa import RunRecord, partition
+from repro.optim.problems import ERMProblem
+
+
+# ---------------------------------------------------------------------------
+# Mini-batch SGD (Pegasos-style step size for SVM)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    n_workers: int
+    outer_iters: int = 100
+    batch_per_worker: int = 64
+    lr0: Optional[float] = None  # default 1/(lam * (t + t0))
+    t0: float = 100.0
+    seed: int = 0
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def _sgd_step(problem_static, Xs, ys, w, batch_per_worker, lam, t, key):
+    loss, gamma_sm, t0, lr0 = problem_static
+    m, nl, d = Xs.shape
+    keys = jax.random.split(key, m)
+
+    def worker_grad(Xk, yk, k):
+        idx = jax.random.randint(k, (batch_per_worker,), 0, nl)
+        xb, yb = Xk[idx], yk[idx]
+        z = yb * (xb @ w)
+        if loss == "hinge":
+            gz = jnp.where(z < 1.0, -1.0, 0.0)
+        elif loss == "smooth_hinge":
+            gz = jnp.where(z >= 1.0, 0.0,
+                           jnp.where(z <= 1.0 - gamma_sm, -1.0,
+                                     (z - 1.0) / gamma_sm))
+        else:
+            gz = -jax.nn.sigmoid(-z)
+        return xb.T @ (gz * yb) / batch_per_worker
+
+    grads = jax.vmap(worker_grad)(Xs, ys, keys)  # (m, d)
+    g = jnp.mean(grads, 0) + lam * w
+    lr = lr0 if lr0 is not None else 1.0 / (lam * (t + t0))
+    w_new = w - lr * g
+    # Pegasos projection onto the ||w|| <= 1/sqrt(lam) ball
+    norm = jnp.linalg.norm(w_new)
+    return w_new * jnp.minimum(1.0, 1.0 / (jnp.sqrt(lam) * norm + 1e-30))
+
+
+def run_minibatch_sgd(problem: ERMProblem, cfg: SGDConfig,
+                      record_every: int = 1) -> RunRecord:
+    m = cfg.n_workers
+    Xs, ys = partition(problem.X, problem.y, m)
+    w = jnp.zeros((problem.d,), jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    static = (problem.loss, problem.smooth_gamma, cfg.t0, cfg.lr0)
+    primal = []
+    t_compute = 0.0
+    for it in range(cfg.outer_iters):
+        key, sub = jax.random.split(key)
+        t_start = time.perf_counter()
+        w = _sgd_step(static, Xs, ys, w, cfg.batch_per_worker, problem.lam,
+                      jnp.float32(it + 1), sub)
+        w.block_until_ready()
+        t_compute += time.perf_counter() - t_start
+        if it % record_every == 0 or it == cfg.outer_iters - 1:
+            primal.append(float(problem.primal(w)))
+    p = np.asarray(primal)
+    nan = np.full_like(p, np.nan)
+    return RunRecord(p, nan, nan, np.asarray(w), t_compute)
+
+
+# ---------------------------------------------------------------------------
+# Local-update SGD (Splash-like: local passes then averaging)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LocalSGDConfig:
+    n_workers: int
+    outer_iters: int = 100
+    local_steps: Optional[int] = None  # default: one local epoch
+    lr0: float = 1.0
+    t0: float = 100.0
+    seed: int = 0
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def _local_sgd_step(problem_static, Xs, ys, w, local_steps, lam, t, key):
+    loss, gamma_sm, lr0, t0 = problem_static
+    m, nl, d = Xs.shape
+    h = local_steps or nl
+    keys = jax.random.split(key, m)
+
+    def worker(Xk, yk, k):
+        if h <= nl:
+            idx = jax.random.permutation(k, nl)[:h]
+        else:
+            idx = jax.random.randint(k, (h,), 0, nl)
+
+        def step(carry, args):
+            wk, step_i = carry
+            j = args
+            x, yj = Xk[j], yk[j]
+            z = yj * jnp.dot(x, wk)
+            if loss == "hinge":
+                gz = jnp.where(z < 1.0, -1.0, 0.0)
+            elif loss == "smooth_hinge":
+                gz = jnp.where(z >= 1.0, 0.0,
+                               jnp.where(z <= 1.0 - gamma_sm, -1.0,
+                                         (z - 1.0) / gamma_sm))
+            else:
+                gz = -jax.nn.sigmoid(-z)
+            g = gz * yj * x + lam * wk
+            lr = lr0 / (lam * (t * h + step_i + t0))
+            return (wk - lr * g, step_i + 1.0), None
+
+        (wk, _), _ = jax.lax.scan(step, (w, jnp.float32(0.0)), idx)
+        return wk
+
+    w_locals = jax.vmap(worker)(Xs, ys, keys)  # (m, d)
+    return jnp.mean(w_locals, 0)
+
+
+def run_local_sgd(problem: ERMProblem, cfg: LocalSGDConfig,
+                  record_every: int = 1) -> RunRecord:
+    m = cfg.n_workers
+    Xs, ys = partition(problem.X, problem.y, m)
+    w = jnp.zeros((problem.d,), jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    static = (problem.loss, problem.smooth_gamma, cfg.lr0, cfg.t0)
+    primal = []
+    t_compute = 0.0
+    for it in range(cfg.outer_iters):
+        key, sub = jax.random.split(key)
+        t_start = time.perf_counter()
+        w = _local_sgd_step(static, Xs, ys, w, cfg.local_steps, problem.lam,
+                            jnp.float32(it), sub)
+        w.block_until_ready()
+        t_compute += time.perf_counter() - t_start
+        if it % record_every == 0 or it == cfg.outer_iters - 1:
+            primal.append(float(problem.primal(w)))
+    p = np.asarray(primal)
+    nan = np.full_like(p, np.nan)
+    return RunRecord(p, nan, nan, np.asarray(w), t_compute)
+
+
+# ---------------------------------------------------------------------------
+# Full gradient descent (convergence independent of m — §2.2)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GDConfig:
+    outer_iters: int = 100
+    lr: float = 0.5
+
+
+def run_gd(problem: ERMProblem, cfg: GDConfig,
+           record_every: int = 1) -> RunRecord:
+    w = jnp.zeros((problem.d,), jnp.float32)
+    grad = jax.jit(problem.grad)
+    primal = []
+    t_compute = 0.0
+    for it in range(cfg.outer_iters):
+        t_start = time.perf_counter()
+        w = w - cfg.lr * grad(w)
+        w.block_until_ready()
+        t_compute += time.perf_counter() - t_start
+        if it % record_every == 0 or it == cfg.outer_iters - 1:
+            primal.append(float(problem.primal(w)))
+    p = np.asarray(primal)
+    nan = np.full_like(p, np.nan)
+    return RunRecord(p, nan, nan, np.asarray(w), t_compute)

@@ -1,0 +1,45 @@
+"""Elastic rescale: move a training state between meshes of different size.
+
+The adaptive controller (repro.core.adaptive) decides WHEN to change the
+data-parallel degree; this module executes the move:
+
+  1. checkpoint (or use in-memory host copies),
+  2. build the new mesh + sharding rules,
+  3. re-place every leaf with its sharding on the new mesh,
+  4. resume — the step function is re-jitted for the new mesh by the driver.
+
+Works across any pair of mesh shapes because checkpoints are global host
+arrays (see CheckpointManager.restore_sharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.dist.partitioning import Rules
+from repro.dist.treeutil import map_with_axes
+
+
+def shardings_for(mesh, rules: Rules, axes_tree, value_tree):
+    """NamedSharding tree for params/opt-state (shape-aware)."""
+    def mk(leaf, ax):
+        return rules.param_sharding(mesh, ax, getattr(leaf, "shape", ()))
+
+    return map_with_axes(mk, value_tree, axes_tree)
+
+
+def reshard_tree(tree, shardings):
+    """Place (host or device) arrays onto new shardings."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def rescale(host_state: Dict[str, Any], new_mesh, rules: Rules,
+            axes: Dict[str, Any]) -> Dict[str, Any]:
+    """host_state: {'params': tree, 'opt_state': tree}; axes: matching
+    logical-axes trees {'params': ..., 'opt_state': ...}."""
+    out = {}
+    for key in host_state:
+        sh = shardings_for(new_mesh, rules, axes[key], host_state[key])
+        out[key] = reshard_tree(host_state[key], sh)
+    return out

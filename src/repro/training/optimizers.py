@@ -1,0 +1,153 @@
+"""Optimizers (optax-free): AdamW and Adafactor.
+
+Each optimizer also maps the params' *logical axes* tree onto its state tree
+(``init_axes``) so the dry-run can construct shardings for the optimizer
+state (ZeRO-style: state is sharded exactly like its parameter).
+
+Adafactor (factored second moments, no first moment) is the default for
+>=70B-parameter archs: Adam's fp32 (m, v) alone would not fit 16 GB/chip for
+jamba-398B on a 256-chip pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]                 # params -> state
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # (grads, state, params, lr) -> (new_params, new_state)
+    init_axes: Callable[[Any], Any]            # param axes tree -> state axes tree
+    name: str = "opt"
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        mu_hat_scale = 1.0 / (1 - b1 ** cf)
+        nu_hat_scale = 1.0 / (1 - b2 ** cf)
+
+        def step(p, m, v):
+            upd = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}
+
+    def init_axes(axes):
+        return {"mu": axes, "nu": axes, "count": ()}
+
+    return Optimizer(init, update, init_axes, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018; factored v, no momentum)
+# ---------------------------------------------------------------------------
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"v": jax.tree.map(leaf, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        beta2 = 1.0 - cf ** (-decay)
+
+        def leaf(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                rhat = (vr / denom)[..., None]
+                upd = gf * jax.lax.rsqrt(rhat * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                upd = gf * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        new_p, new_s = zip(*[leaf(p, g, s) for p, g, s
+                             in zip(flat_p, flat_g, flat_s)])
+        return (jax.tree.unflatten(treedef, new_p),
+                {"v": jax.tree.unflatten(treedef, new_s), "count": count})
+
+    def init_axes(axes):
+        from repro.dist.treeutil import map_axes
+
+        def leaf(ax):
+            ax = tuple(ax)
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+
+        return {"v": map_axes(leaf, axes), "count": ()}
+
+    return Optimizer(init, update, init_axes, name="adafactor")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def default_optimizer_for(n_params: int) -> str:
+    """Adafactor for huge models (fp32 Adam state would not fit per chip)."""
+    return "adafactor" if n_params > 40e9 else "adamw"

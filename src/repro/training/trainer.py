@@ -1,0 +1,129 @@
+"""Training step construction: grad-accum, clipping, lr schedule, local-SGD.
+
+``make_train_step`` builds the pjit-able pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+used by both the real trainer (launch/train.py) and the dry-run.
+
+Distributed-optimization tricks (the knobs Hemingway's planner chooses
+between, mirroring the paper's algorithm menu):
+  * sync data-parallel AdamW/Adafactor (the baseline "mini-batch" algorithm)
+  * local-SGD / DiLoCo-style H local steps + outer sync (CoCoA's
+    communication-avoidance idea applied to LMs) — see local_sgd_outer
+  * gradient compression (repro.compression) applied at the sync boundary
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.training.optimizers import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+    microbatches: int = 1     # gradient accumulation factor
+    # local-SGD (H>1 => H local steps between outer syncs)
+    local_steps: int = 1
+    compression: Optional[str] = None  # None | "int8" | "topk" | "powersgd"
+
+
+def lr_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    total = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((s - cfg.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * jnp.where(s < cfg.warmup_steps, warm, decay)
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    """(B, ...) -> (n, B//n, ...) for every leaf."""
+    return jax.tree.map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+
+def make_train_step(lm: LM, opt: Optimizer, cfg: TrainConfig,
+                    compressor=None) -> Callable:
+    """Returns step(params, opt_state, batch, step_idx) -> (p, s, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm.loss_fn(params, batch)
+
+    def step_fn(params, opt_state, batch, step_idx):
+        if cfg.microbatches > 1:
+            micro = _split_microbatches(batch, cfg.microbatches)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, grads)
+            loss = loss_sum / cfg.microbatches
+            metrics_extra = {}
+        else:
+            (loss, metrics_extra), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        if compressor is not None:
+            grads, opt_state = compressor.apply(grads, opt_state)
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_schedule(cfg, step_idx)
+        new_params, new_opt = opt.update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        metrics.update({k: v for k, v in dict(metrics_extra).items()
+                        if jnp.ndim(v) == 0})
+        return new_params, new_opt, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Local-SGD (communication-avoiding data parallelism) — CoCoA's idea applied
+# to LM training: H inner steps per data shard with NO cross-shard gradient
+# sync, then one parameter averaging.  Expressed as shard_map over the data
+# axes: inside, the loss mean and optimizer run per shard (psum over 'model'
+# only, inserted by GSPMD for the TP dims); the outer sync is a pmean of the
+# params every H steps.  The dry-run lowers both variants to compare
+# collective bytes (EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+def make_diloco_inner_step(lm: LM, opt: Optimizer, cfg: TrainConfig,
+                           n_replicas: int):
+    """DiLoCo-style inner step: vmap the whole train step over a leading
+    replica axis.  Each replica holds its own (model-sharded) parameter copy
+    which diverges between outer syncs; sharding the replica axis over
+    'data' makes the inner step free of data-axis gradient collectives --
+    the LM-training analogue of CoCoA's local SDCA rounds.  Outer sync
+    (every H steps) is a mean of params over replicas, amortizing the
+    gradient all-reduce by 1/H.  Param memory is x n_replicas vs FSDP (the
+    trade Hemingway's planner weighs).
+    """
+    base = make_train_step(lm, opt, cfg)
+
+    def inner(params_r, opt_state_r, batch_r, step_idx):
+        # params_r: leading axis n_replicas (sharded over 'data'); batch_r:
+        # (n_replicas, per_replica_batch, ...)
+        return jax.vmap(lambda p, o, b: base(p, o, b, step_idx))(
+            params_r, opt_state_r, batch_r)
+
+    def outer_sync(params_r):
+        mean = jax.tree.map(lambda p: p.mean(axis=0, keepdims=True), params_r)
+        return jax.tree.map(
+            lambda m: jnp.broadcast_to(m, (n_replicas,) + m.shape[1:]), mean)
+
+    return inner, outer_sync

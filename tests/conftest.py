@@ -1,0 +1,20 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (dry-run sets 512 in its own process).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Free compiled executables between modules — the full suite compiles
+    hundreds of programs and would otherwise exhaust container RAM."""
+    yield
+    jax.clear_caches()

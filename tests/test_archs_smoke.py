@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config, one train step + serve path
+on CPU; asserts output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ARCH_IDS,
+    applicable_shapes,
+    get_config,
+    get_smoke_config,
+)
+from repro.models.model import LM
+from repro.models.runtime import Runtime
+
+RT = Runtime(remat="none", block_q=16, block_k=16, scan_chunk=16)
+
+
+def _batch(cfg, b=2, s=32):
+    f = cfg.n_frontend_tokens
+    out = {"tokens": jnp.ones((b, s - f), jnp.int32),
+           "labels": jnp.ones((b, s - f), jnp.int32)}
+    if f:
+        out["frontend_embeds"] = jnp.full((b, f, cfg.d_model), 0.01,
+                                          jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg, RT)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lm.loss_fn, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg, RT)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    logits, cache = jax.jit(lm.prefill)(params, batch["tokens"],
+                                        batch.get("frontend_embeds"))
+    assert logits.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    # decode against a fresh full-capacity cache
+    full = lm.init_cache(b, s + 4)
+    logits2, new_cache = jax.jit(lm.decode_step)(
+        params, jnp.ones((b,), jnp.int32), jnp.zeros((b,), jnp.int32), full)
+    assert logits2.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+    # cache pytree structure preserved
+    assert jax.tree.structure(full) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill_logits(arch):
+    """Teacher-forced decode must reproduce prefill's final logits."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        # capacity drops differ between a 16-token prefill and 1-token decode
+        # steps (Switch semantics); use drop-free capacity for equivalence
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    lm = LM(cfg, RT)
+    params, _ = lm.init(jax.random.PRNGKey(1))
+    b, s = 2, 8
+    f = cfg.n_frontend_tokens
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s - f), 0,
+                                cfg.vocab_size)
+    fe = (jnp.full((b, f, cfg.d_model), 0.01, jnp.float32) if f else None)
+    logits_prefill, _ = jax.jit(lm.prefill)(params, tokens, fe)
+    # feed tokens one-by-one through decode (frontend unsupported in decode
+    # smoke: skip archs with a frontend for this equivalence check)
+    if f:
+        pytest.skip("frontend archs: prefill-only equivalence")
+    cache = lm.init_cache(b, s + 1)
+    lengths = jnp.zeros((b,), jnp.int32)
+    dec = jax.jit(lm.decode_step)
+    for t in range(s):
+        logits_dec, cache = dec(params, tokens[:, t], lengths, cache)
+        lengths = lengths + 1
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_prefill, np.float32), atol=0.1, rtol=0.05)
+
+
+def test_applicable_shapes_assignment():
+    """long_500k only for SSM/hybrid; decode applies everywhere."""
+    cells = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = {s.name for s in applicable_shapes(cfg)}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+        if arch in ("falcon-mamba-7b", "jamba-1.5-large-398b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        cells += len(shapes)
+    assert cells == 32
+
+
+def test_param_counts_match_published():
+    expected = {
+        "falcon-mamba-7b": 7.3e9,
+        "qwen3-14b": 14.8e9,
+        "qwen1.5-110b": 111e9,
+        "qwen3-32b": 32.8e9,
+        "jamba-1.5-large-398b": 399e9,
+        "deepseek-v2-236b": 236e9,
+        "deepseek-moe-16b": 16.4e9,
+    }
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.02, f"{arch}: {got:.3e} vs {n:.3e}"
+    # MoE active params
+    assert abs(get_config("deepseek-v2-236b").param_count(True) - 21.4e9) < 1e9
+    assert abs(get_config("jamba-1.5-large-398b").param_count(True) - 94e9) < 2e9

@@ -1,0 +1,74 @@
+"""HLO cost parser: exact flop attribution through while loops (the fix for
+cost_analysis counting loop bodies once)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.dist.hlo_costs import analyze_hlo, top_contributors
+
+
+def _costs(fn, *sds):
+    txt = jax.jit(fn).lower(*sds).compile().as_text()
+    return analyze_hlo(txt), txt
+
+
+M, K, N = 64, 128, 96
+A = jax.ShapeDtypeStruct((M, K), jnp.float32)
+B = jax.ShapeDtypeStruct((K, N), jnp.float32)
+W = jax.ShapeDtypeStruct((K, K), jnp.float32)
+
+
+def test_plain_matmul_exact():
+    c, _ = _costs(lambda a, b: a @ b, A, B)
+    assert c.flops == pytest.approx(2 * M * N * K, rel=1e-3)
+
+
+def test_scan_multiplies_by_trip_count():
+    def scanned(a, ws):
+        return lax.scan(lambda x, w: (x @ w, ()), a, ws)[0]
+
+    ws = jax.ShapeDtypeStruct((10, K, K), jnp.float32)
+    c, _ = _costs(scanned, A, ws)
+    assert c.flops == pytest.approx(10 * 2 * M * K * K, rel=1e-3)
+    assert c.n_whiles >= 1
+
+
+def test_nested_scans_multiply():
+    def nested(a, ws):
+        def outer(x, w3):
+            return lax.scan(lambda y, w: (y @ w, ()), x, w3)[0], ()
+
+        return lax.scan(outer, a, ws)[0]
+
+    ws = jax.ShapeDtypeStruct((3, 4, K, K), jnp.float32)
+    c, _ = _costs(nested, A, ws)
+    assert c.flops == pytest.approx(12 * 2 * M * K * K, rel=1e-3)
+
+
+def test_fori_loop_static_bound():
+    c, _ = _costs(lambda a, w: lax.fori_loop(0, 7, lambda i, x: x @ w, a),
+                  A, W)
+    assert c.flops == pytest.approx(7 * 2 * M * K * K, rel=1e-3)
+
+
+def test_grad_counts_forward_and_backward():
+    def loss(a, b):
+        return jnp.sum((a @ b) ** 2)
+
+    c, _ = _costs(jax.grad(loss, argnums=(0, 1)), A, B)
+    # fwd (2MNK) + two bwd matmuls (dA = g b^T: 2MKN, dB = a^T g: 2KMN)
+    assert c.flops >= 3 * 2 * M * N * K * 0.95
+
+
+def test_bytes_and_collectives_nonnegative():
+    c, txt = _costs(lambda a, b: a @ b, A, B)
+    assert c.bytes_accessed > 0
+    assert c.collective_wire_bytes == 0  # single device
+
+
+def test_top_contributors_finds_the_dot():
+    _, txt = _costs(lambda a, b: a @ b, A, B)
+    rows = top_contributors(txt, "flops", 3)
+    assert rows and rows[0][0] == pytest.approx(2 * M * N * K, rel=1e-3)

@@ -1,0 +1,103 @@
+"""Distributed optimization algorithms: the paper's §2 empirical claims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    BSPCluster,
+    CocoaConfig,
+    ERMProblem,
+    GDConfig,
+    LBFGSConfig,
+    LocalSGDConfig,
+    SGDConfig,
+    run_cocoa,
+    run_gd,
+    run_lbfgs,
+    run_local_sgd,
+    run_minibatch_sgd,
+    synthetic_mnist,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = synthetic_mnist(4096, 128, 32, 0.09, 0.35, 0)
+    return ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-3, loss="hinge")
+
+
+@pytest.fixture(scope="module")
+def smooth_problem():
+    X, y = synthetic_mnist(2048, 64, 16, 0.09, 0.35, 1)
+    return ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-3,
+                      loss="logistic")
+
+
+def test_cocoa_dual_ascends_and_gap_shrinks(problem):
+    rec = run_cocoa(problem, CocoaConfig(4, 25, plus=False))
+    assert rec.gap[-1] < rec.gap[0]
+    assert rec.gap[-1] > -1e-6  # weak duality
+    assert rec.dual[-1] > rec.dual[0]
+
+
+def test_cocoa_plus_dual_monotone(problem):
+    """CoCoA+ (adding, sigma'=K) has a per-round dual ascent guarantee."""
+    rec = run_cocoa(problem, CocoaConfig(8, 20, plus=True))
+    assert np.all(np.diff(rec.dual) >= -1e-7)
+
+
+def test_cocoa_convergence_degrades_with_m(problem):
+    """Fig 1b: more machines => slower convergence per iteration."""
+    gaps = {}
+    for m in (4, 16, 64):
+        rec = run_cocoa(problem, CocoaConfig(m, 20, plus=False, seed=3))
+        gaps[m] = np.minimum.accumulate(rec.primal)[-1]
+    assert gaps[64] > gaps[4], gaps
+
+
+def test_cocoa_beats_sgd(problem):
+    """Fig 1c: CoCoA-family >> SGD-family at the same iteration count."""
+    m = 8
+    cocoa = run_cocoa(problem, CocoaConfig(m, 20, plus=False))
+    sgd = run_minibatch_sgd(problem, SGDConfig(m, 20, batch_per_worker=64))
+    assert cocoa.primal[-1] < sgd.primal[-1]
+
+
+def test_local_sgd_runs_and_descends(problem):
+    rec = run_local_sgd(problem, LocalSGDConfig(4, 15))
+    assert rec.primal[-1] < rec.primal[0]
+
+
+def test_gd_converges_m_independent(smooth_problem):
+    rec = run_gd(smooth_problem, GDConfig(60, lr=1.0))
+    assert rec.primal[-1] < rec.primal[0]
+
+
+def test_lbfgs_beats_gd_per_iteration(smooth_problem):
+    gd = run_gd(smooth_problem, GDConfig(30, lr=1.0))
+    lbfgs = run_lbfgs(smooth_problem, LBFGSConfig(30))
+    assert lbfgs.primal[-1] <= gd.primal[-1] + 1e-9
+
+
+def test_lbfgs_rejects_nonsmooth(problem):
+    with pytest.raises(ValueError):
+        run_lbfgs(problem, LBFGSConfig(2))
+
+
+def test_bsp_cluster_u_shape():
+    """Fig 1a: per-iteration time improves then degrades with m (comm)."""
+    cluster = BSPCluster()
+    times = {m: cluster.iteration_time(m, compute_total_s=2.0, d=784)
+             for m in (1, 8, 64, 2048)}
+    assert times[8] < times[1]          # parallelism helps
+    assert times[2048] > times[64]      # comm/driver overhead dominates
+
+
+def test_ernest_sample_collection(problem):
+    cluster = BSPCluster()
+    samples = cluster.collect_ernest_samples(
+        problem, "cocoa", [(1, 0.1), (2, 0.1), (4, 0.2), (8, 0.2)],
+        iters_per_sample=2)
+    assert len(samples) == 4
+    model = cluster.fit_ernest(samples)
+    assert model.predict(16, problem.n) > 0

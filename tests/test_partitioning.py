@@ -1,0 +1,98 @@
+"""Sharding rules: resolution, dedupe, divisibility fallback."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.partitioning import Rules
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+def rules_2d():
+    return Rules.default(FakeMesh((16, 16), ("data", "model")))
+
+
+def rules_3d():
+    return Rules.default(FakeMesh((2, 16, 16), ("pod", "data", "model")))
+
+
+def test_basic_param_resolution():
+    r = rules_2d()
+    assert r.param_pspec(("embed", "mlp")) == P("data", "model")
+    assert r.param_pspec(("vocab", "embed")) == P("model", "data")
+    assert r.param_pspec(("norm",)) == P(None)
+
+
+def test_pod_axis_joins_fsdp():
+    r = rules_3d()
+    spec = r.param_pspec(("embed", "mlp"), (8192, 24576))
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_dedupe_first_dim_wins():
+    r = rules_2d()
+    # both dims want 'model' -> second gets None
+    spec = r.param_pspec(("mlp", "expert"))
+    assert spec == P("model", None)
+
+
+def test_divisibility_fallback_drops_axis():
+    r = rules_2d()
+    # kv_heads=8 can't shard over model=16 -> replicated, head_dim claims it
+    spec = r.act_pspec(("cache_batch", "act_kv_heads", "cache_seq",
+                        "cache_head_dim"), (128, 8, 32768, 128))
+    assert spec == P("data", None, None, "model")
+    # kv_heads=32 divides -> heads sharded, head_dim replicated
+    spec = r.act_pspec(("cache_batch", "act_kv_heads", "cache_seq",
+                        "cache_head_dim"), (128, 32, 32768, 128))
+    assert spec == P("data", "model", None, None)
+
+
+def test_partial_axis_tuple_kept():
+    r = rules_3d()
+    # batch 2 divides pod(2) but not pod*data(32): keep only 'pod'
+    spec = r.act_pspec(("batch", "seq"), (2, 4096))
+    assert spec == P("pod", None)
+
+
+def test_override():
+    r = rules_2d().override(acts={"cache_seq": "data", "batch": None})
+    spec = r.act_pspec(("batch", "cache_seq"), (1, 524288))
+    assert spec == P(None, "data")
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from(
+    ["embed", "mlp", "vocab", "heads_flat", "kv_flat", "expert", "norm",
+     "layers", None]), min_size=1, max_size=4),
+    st.integers(0, 2**31 - 1))
+def test_resolution_properties(logical, seed):
+    """No mesh axis appears twice; sharded dims always divide."""
+    rng = np.random.RandomState(seed)
+    r = rules_2d()
+    shape = tuple(int(rng.choice([1, 8, 16, 64, 256, 1024])) for _ in logical)
+    spec = r.param_pspec(tuple(logical), shape)
+    seen = []
+    for dim, entry in enumerate(tuple(spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            assert a not in seen, f"axis {a} repeated in {spec}"
+            seen.append(a)
+            prod *= 16
+        assert shape[dim] % prod == 0, (spec, shape)
+
+
+def test_batch_axes_and_model_axis():
+    r = rules_3d()
+    assert r.batch_axes() == ("pod", "data")
+    assert r.model_axis() == "model"
+    r2 = rules_2d()
+    assert r2.batch_axes() == ("data",)
