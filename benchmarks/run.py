@@ -10,6 +10,8 @@ path microbenches; roofline/* summarizes the multi-pod dry-run artifacts.
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -20,6 +22,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="small problem / fewer m values (CI mode)")
     ap.add_argument("--skip-figures", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (perf-trajectory baseline, "
+                         "e.g. BENCH_baseline.json)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -69,6 +74,17 @@ def main() -> None:
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        payload = {
+            "quick": args.quick,
+            "python": platform.python_version(),
+            "rows": [{"name": n, "us_per_call": us, "derived": str(d)}
+                     for n, us, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

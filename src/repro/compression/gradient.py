@@ -23,7 +23,9 @@ import jax.numpy as jnp
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
     scheme: str = "int8"       # int8 | topk | powersgd
-    topk_ratio: float = 0.01
+    # 5% keeps Adam training stable with plain error feedback; 1%-level
+    # sparsity (DGC) additionally needs momentum correction + lr retuning
+    topk_ratio: float = 0.05
     rank: int = 4
     error_feedback: bool = True
 

@@ -10,7 +10,7 @@ suboptimality, duality gap, LM train-loss - floor) works.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 

@@ -9,7 +9,7 @@ Answers the paper's two query types over a registry of candidate algorithms:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -1,0 +1,11 @@
+"""Distribution subsystem: sharding rules, pytree axis mappers, HLO costs.
+
+Four small modules used across launch/, models/, runtime/, and training/:
+
+* ``partitioning`` — logical-axis -> mesh-axis ``Rules`` (the single place
+  sharding policy lives; everything else passes logical names around)
+* ``treeutil``     — pytree-with-logical-axes mappers
+* ``hlo_costs``    — trip-count-exact flop/byte/collective parser over
+  optimized HLO text (XLA's ``cost_analysis`` counts while bodies once)
+* ``hlo_analysis`` — collective-byte summaries for the dry-run roofline
+"""

@@ -1,0 +1,35 @@
+"""Collective-traffic summaries over optimized HLO text.
+
+Thin queries on top of :mod:`repro.dist.hlo_costs` used by the dry-run
+roofline (launch/dryrun.py) and benchmarks/roofline.py: how many bytes
+enter collectives per device, and how many actually cross links under a
+ring algorithm.  Both are trip-count-exact (collectives inside scanned
+layer stacks are multiplied by the loop bound).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.dist.hlo_costs import analyze_hlo
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Total per-device operand bytes entering collective ops."""
+    return int(analyze_hlo(hlo_text).collective_operand_bytes)
+
+
+def collective_wire_bytes(hlo_text: str) -> int:
+    """Total per-device ring-model wire bytes across all collectives."""
+    return int(analyze_hlo(hlo_text).collective_wire_bytes)
+
+
+def collective_breakdown(hlo_text: str) -> Dict[str, int]:
+    """Per-kind operand bytes (e.g. {"all-reduce": ..., "all-gather": ...})."""
+    parsed = analyze_hlo(hlo_text)
+    return {k: int(v) for k, v in parsed.per_kind_operand.items()}
+
+
+def collective_wire_breakdown(hlo_text: str) -> Dict[str, int]:
+    """Per-kind ring-model wire bytes."""
+    parsed = analyze_hlo(hlo_text)
+    return {k: int(v) for k, v in parsed.per_kind_wire.items()}

@@ -1,0 +1,216 @@
+"""Sharding rules: logical axis names -> jax.sharding.PartitionSpec.
+
+Model/optimizer code annotates every tensor dimension with a *logical* name
+("embed", "mlp", "batch", "cache_seq", ...); this module is the one place
+those names meet the physical mesh.  ``Rules.default(mesh)`` encodes the
+production policy (FSDP over the batch axes, tensor parallelism over
+"model"); ``override()`` produces per-cell variants (the dry-run and the
+§Perf hillclimb tweak placement without touching model code).
+
+Resolution semantics (pinned by tests/test_partitioning.py):
+
+* **dedupe, first dim wins** — a mesh axis claimed by an earlier tensor
+  dimension is unavailable to later ones (a PartitionSpec may not repeat a
+  mesh axis).
+* **divisibility fallback** — a dimension that does not divide the mesh
+  axis size is left replicated rather than producing an uneven shard.
+* **partial axis-tuple retention** — for tuple entries like
+  ``("pod", "data")`` the longest *prefix* that divides (and is unclaimed)
+  is kept, so a batch of 2 on a 2x16x16 mesh still shards over "pod".
+* **pod joins fsdp** — every non-"model" mesh axis counts as a batch/FSDP
+  axis, in mesh order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# An entry maps one logical axis to: replicated (None), one mesh axis, or an
+# ordered tuple of mesh axes (sharded over their product).
+AxisEntry = Union[None, str, Tuple[str, ...]]
+
+MODEL_AXIS = "model"
+
+# Sentinel resolved to the mesh's batch/FSDP axes at Rules construction.
+_BATCH = "__batch__"
+
+# Parameter logical axes.  FSDP shards the d_model ("embed") dim over the
+# batch axes; all "wide" dims take tensor parallelism over "model"; small or
+# scan-carried dims stay replicated.
+_PARAM_TABLE: Dict[str, Any] = {
+    "embed": _BATCH,
+    "vocab": MODEL_AXIS,
+    "mlp": MODEL_AXIS,
+    "heads_flat": MODEL_AXIS,
+    "kv_flat": MODEL_AXIS,
+    "expert": MODEL_AXIS,
+    "expert_mlp": MODEL_AXIS,
+    "mamba_inner": MODEL_AXIS,
+    "norm": None,
+    "layers": None,
+    "lora": None,
+    "conv": None,
+    "dt_rank": None,
+    "ssm_state": None,
+}
+
+# Activation / cache logical axes.  Batch dims shard over the batch axes;
+# head/feature dims over "model"; sequence dims replicate by default (the
+# long-context decode cells re-point "cache_seq" via override, see
+# launch/inputs.rules_for_cell).
+_ACT_TABLE: Dict[str, Any] = {
+    "batch": _BATCH,
+    "cache_batch": _BATCH,
+    "act_heads": MODEL_AXIS,
+    "act_kv_heads": MODEL_AXIS,
+    "act_mlp": MODEL_AXIS,
+    "act_mamba": MODEL_AXIS,
+    "act_vocab": MODEL_AXIS,
+    "cache_head_dim": MODEL_AXIS,
+    "seq": None,
+    "frontend_seq": None,
+    "act_embed": None,
+    "cache_seq": None,
+    "cache_latent": None,
+}
+
+
+def _normalize(entry: Any) -> AxisEntry:
+    if entry is None or isinstance(entry, str):
+        return entry
+    return tuple(entry)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Immutable logical->physical placement policy for one mesh."""
+
+    mesh: Any                         # jax.sharding.Mesh (or a stand-in)
+    axis_sizes: Mapping[str, int]     # mesh axis name -> size, in mesh order
+    params: Mapping[str, AxisEntry]
+    acts: Mapping[str, AxisEntry]
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def default(cls, mesh) -> "Rules":
+        names = tuple(mesh.axis_names)
+        sizes = dict(zip(names, mesh.devices.shape))
+        batch = tuple(a for a in names if a != MODEL_AXIS)
+
+        def concretize(table: Mapping[str, Any]) -> Dict[str, AxisEntry]:
+            return {k: (batch if v is _BATCH else _normalize(v))
+                    for k, v in table.items()}
+
+        return cls(mesh=mesh, axis_sizes=sizes,
+                   params=concretize(_PARAM_TABLE),
+                   acts=concretize(_ACT_TABLE))
+
+    def override(self, params: Optional[Mapping[str, Any]] = None,
+                 acts: Optional[Mapping[str, Any]] = None) -> "Rules":
+        """New Rules with some logical-axis entries replaced."""
+        new_params = dict(self.params)
+        new_acts = dict(self.acts)
+        for k, v in (params or {}).items():
+            new_params[k] = _normalize(v)
+        for k, v in (acts or {}).items():
+            new_acts[k] = _normalize(v)
+        return dataclasses.replace(self, params=new_params, acts=new_acts)
+
+    # ------------------------------------------------------------------
+    # Mesh structure
+    # ------------------------------------------------------------------
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the "batch" activation dim currently maps to — by
+        default every non-"model" axis (data parallel + pod), but an
+        ``override(acts={"batch": None})`` empties it, which is how the
+        replicated-token paths (MoE 2D decode, DiLoCo replicas) signal
+        that tokens are not batch-sharded."""
+        entry = self.acts.get("batch")
+        if entry is None:
+            return ()
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        return tuple(a for a in axes if a in self.axis_sizes)
+
+    def model_axis(self) -> Optional[str]:
+        return MODEL_AXIS if MODEL_AXIS in self.axis_sizes else None
+
+    # ------------------------------------------------------------------
+    # Resolution
+    # ------------------------------------------------------------------
+    def _pick(self, entry: AxisEntry, dim: Optional[int], used: set):
+        """Resolve one tensor dim's entry against claimed axes + its size."""
+        if entry is None:
+            return None
+        cand = entry if isinstance(entry, tuple) else (entry,)
+        # axes absent from this mesh (e.g. "pod" on a single-pod mesh) are
+        # skipped so overrides written for the big mesh still apply
+        cand = tuple(a for a in cand if a in self.axis_sizes)
+        picked, prod = [], 1
+        for a in cand:
+            if a in used:
+                break
+            size = self.axis_sizes[a]
+            if dim is not None and dim % (prod * size) != 0:
+                break
+            picked.append(a)
+            prod *= size
+        if not picked:
+            return None
+        used.update(picked)
+        return picked[0] if len(picked) == 1 else tuple(picked)
+
+    def _pspec(self, lookup, axes: Sequence[Optional[str]],
+               shape: Optional[Sequence[int]]) -> P:
+        if shape is not None and len(shape) != len(axes):
+            raise ValueError(f"shape {tuple(shape)} rank != axes {tuple(axes)}")
+        used: set = set()
+        entries = []
+        for i, name in enumerate(axes):
+            dim = None if shape is None else int(shape[i])
+            entries.append(self._pick(lookup(name), dim, used))
+        return P(*entries)
+
+    def _param_entry(self, name: Optional[str]) -> AxisEntry:
+        return self.params.get(name) if name else None
+
+    def _act_entry(self, name: Optional[str]) -> AxisEntry:
+        """Acts first, then params — cache trees reuse parameter logical
+        names (e.g. "mamba_inner") for their feature dims."""
+        if not name:
+            return None
+        if name in self.acts:
+            return self.acts[name]
+        return self.params.get(name)
+
+    def param_pspec(self, axes: Sequence[Optional[str]],
+                    shape: Optional[Sequence[int]] = None) -> P:
+        return self._pspec(self._param_entry, tuple(axes), shape)
+
+    def act_pspec(self, axes: Sequence[Optional[str]],
+                  shape: Optional[Sequence[int]] = None) -> P:
+        return self._pspec(self._act_entry, tuple(axes), shape)
+
+    def param_sharding(self, mesh, axes: Sequence[Optional[str]],
+                       shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(mesh, self.param_pspec(axes, shape))
+
+    def act_sharding(self, mesh, axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(mesh, self.act_pspec(axes, shape))
+
+
+def constrain(x: jax.Array, rules: Optional[Rules],
+              axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint via the activation rules (no-op without a
+    mesh).  Shape-aware, so non-divisible dims silently stay replicated."""
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.act_pspec(tuple(axes), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

@@ -1,3 +1,14 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared pallas compatibility helpers for the kernel implementations."""
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` was ``TPUCompilerParams`` before jax 0.5;
+    construct whichever this jax ships."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

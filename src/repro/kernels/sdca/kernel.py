@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _sdca_kernel(x_ref, y_ref, a_ref, w_ref, idx_ref,
                  a_out_ref, dw_ref, v_ref,
@@ -30,10 +32,14 @@ def _sdca_kernel(x_ref, y_ref, a_ref, w_ref, idx_ref,
 
     def step(t, _):
         j = idx_ref[0, t]
-        x = pl.load(x_ref, (0, pl.dslice(j, 1), slice(None)))[0].astype(
-            jnp.float32)                                    # (d,)
-        yj = pl.load(y_ref, (0, pl.dslice(j, 1)))[0].astype(jnp.float32)
-        aj = pl.load(a_out_ref, (0, pl.dslice(j, 1)))[0].astype(jnp.float32)
+        # NOTE: pl.dslice(0, 1) instead of a bare 0 index — jax<0.5's
+        # load/store discharge rule (interpret mode) rejects python ints
+        x = pl.load(x_ref, (pl.dslice(0, 1), pl.dslice(j, 1),
+                            slice(None)))[0, 0].astype(jnp.float32)   # (d,)
+        yj = pl.load(y_ref, (pl.dslice(0, 1),
+                             pl.dslice(j, 1)))[0, 0].astype(jnp.float32)
+        aj = pl.load(a_out_ref, (pl.dslice(0, 1),
+                                 pl.dslice(j, 1)))[0, 0].astype(jnp.float32)
         xx = jnp.sum(x * x)
         q = sigma_prime * xx / (lam * n)
         margin = yj * jnp.sum(v_ref[...] * x)
@@ -41,8 +47,8 @@ def _sdca_kernel(x_ref, y_ref, a_ref, w_ref, idx_ref,
                               0.0)
         a_new = jnp.clip(aj + delta_raw, 0.0, 1.0)
         delta = jnp.where(xx > 0, a_new - aj, 0.0)
-        pl.store(a_out_ref, (0, pl.dslice(j, 1)),
-                 (aj + delta)[None].astype(a_out_ref.dtype))
+        pl.store(a_out_ref, (pl.dslice(0, 1), pl.dslice(j, 1)),
+                 (aj + delta)[None, None].astype(a_out_ref.dtype))
         v_ref[...] = v_ref[...] + sigma_prime * delta * yj * x / (lam * n)
         return 0
 
@@ -88,7 +94,7 @@ def local_sdca_pallas(
             jax.ShapeDtypeStruct((m, d), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(X, y, a, w_b, idx.astype(jnp.int32))

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
                 h_ref, *, chunk: int, n_chunks: int, seq_len: int):
@@ -92,7 +94,7 @@ def selective_scan_pallas(
                                lambda b, di, ci: (b, ci, di)),
         out_shape=jax.ShapeDtypeStruct((bt, nc * chunk, nd * d_block), x.dtype),
         scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_, dt_, A_, B_, C_, D_)

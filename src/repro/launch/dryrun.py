@@ -30,8 +30,10 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import ARCH_IDS, applicable_shapes, get_config
+from repro.configs import (ARCH_IDS, applicable_shapes, get_config,
+                           get_smoke_config)
 from repro.configs.base import SHAPES_BY_NAME, ShapeSpec
 from repro.dist.hlo_analysis import collective_bytes, collective_wire_bytes
 from repro.dist.hlo_costs import analyze_hlo
@@ -44,7 +46,7 @@ from repro.launch.inputs import (
     rules_for_cell,
     text_seq_len,
 )
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_scaled_mesh
 from repro.models.model import LM
 from repro.models.runtime import Runtime
 from repro.training.optimizers import default_optimizer_for, get_optimizer
@@ -80,11 +82,17 @@ def model_flops(cfg, shape: ShapeSpec) -> float:
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                rules_overrides: dict | None = None,
                runtime_overrides: dict | None = None,
-               serve_params_bf16: bool = False):
-    """Returns (lowered, compiled, context dict)."""
-    cfg = get_config(arch)
+               serve_params_bf16: bool = False,
+               mesh=None, smoke: bool = False):
+    """Returns (lowered, compiled, context dict).
+
+    ``mesh`` overrides the production mesh (the f(m) sweep passes scaled
+    meshes); ``smoke`` swaps in the shrunk config so the sweep compiles in
+    CPU-container time."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     rules = Rules.default(mesh)
     if rules_overrides:
         rules = rules.override(**rules_overrides)
@@ -155,6 +163,8 @@ def analyze(lowered, compiled, ctx) -> dict:
     chips = _mesh_chips(mesh)
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax>=0.4.30 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # trip-count-aware costs (cost_analysis counts while bodies once; our
     # parser multiplies by static loop bounds — see dist/hlo_costs.py)
@@ -163,8 +173,8 @@ def analyze(lowered, compiled, ctx) -> dict:
     bytes_per_device = parsed.bytes_accessed
     coll_per_device = parsed.collective_operand_bytes
     wire_per_device = parsed.collective_wire_bytes
-    breakdown = {k: int(v) for k, v in parsed.per_kind_wire.items()}
-    breakdown_wire = breakdown
+    breakdown = {k: int(v) for k, v in parsed.per_kind_operand.items()}
+    breakdown_wire = {k: int(v) for k, v in parsed.per_kind_wire.items()}
     # spec formulas use global sums over chips
     hlo_flops = flops_per_device * chips
     hlo_bytes = bytes_per_device * chips
@@ -237,6 +247,55 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     return result
 
 
+def fm_sweep(arch: str, shape_name: str, chips: list[int], out_dir: Path,
+             smoke: bool = False, force: bool = False) -> dict:
+    """Hemingway f(m) from the roofline: lower the same (arch, shape) on
+    meshes of increasing size, record the analytic step time per mesh, and
+    fit ErnestModel on the (m, size, t_step) samples — the paper's system
+    model built from compiled programs instead of cluster runs (§3.2.1,
+    DESIGN.md §4)."""
+    from repro.core.ernest import ErnestModel
+
+    tag = "smoke" if smoke else "full"
+    out_path = out_dir / f"fm__{arch}__{shape_name}__{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    samples = []
+    for n in chips:
+        t0 = time.time()
+        mesh = make_scaled_mesh(n, model=min(16, n))
+        m = int(mesh.devices.size)   # may be < n (data axis truncates)
+        lowered, compiled, ctx = lower_cell(arch, shape_name, False,
+                                            mesh=mesh, smoke=smoke)
+        r = analyze(lowered, compiled, ctx)
+        t_step = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        tokens = ctx["shape"].global_batch * text_seq_len(ctx["cfg"],
+                                                          ctx["shape"])
+        samples.append({"m": m, "size": tokens, "t_step_s": t_step,
+                        "dominant": r["dominant"],
+                        "t_compute_s": r["t_compute_s"],
+                        "t_memory_s": r["t_memory_s"],
+                        "t_collective_s": r["t_collective_s"],
+                        "compile_seconds": time.time() - t0})
+        print(f"[f(m)] m={m:4d} t_step={t_step:.3e}s "
+              f"dom={r['dominant']} ({samples[-1]['compile_seconds']:.0f}s "
+              "compile)", flush=True)
+    model = ErnestModel().fit([s["m"] for s in samples],
+                              [s["size"] for s in samples],
+                              [s["t_step_s"] for s in samples])
+    result = {"arch": arch, "shape": shape_name, "smoke": smoke,
+              "samples": samples, "ernest_terms": list(model.term_names),
+              "ernest_theta": model.coefficients(),
+              "ernest_pct_err": list(model.percent_errors(
+                  np.asarray([s["m"] for s in samples], float),
+                  np.asarray([s["size"] for s in samples], float),
+                  np.asarray([s["t_step_s"] for s in samples], float)))}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=2))
+    print(f"[f(m)] theta: {result['ernest_theta']}", flush=True)
+    return result
+
+
 def all_cells():
     for arch in ARCH_IDS:
         cfg = get_config(arch)
@@ -253,8 +312,21 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fm", action="store_true",
+                    help="f(m) sweep: step-time estimates across mesh sizes, "
+                         "fitted with ErnestModel")
+    ap.add_argument("--fm-chips", type=int, nargs="+",
+                    default=[16, 32, 64, 128, 256])
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the shrunk config (CPU-container compile times)")
     args = ap.parse_args()
     out_dir = Path(args.out)
+    if args.fm:
+        if not args.arch or not args.shape:
+            ap.error("--fm requires --arch and --shape")
+        fm_sweep(args.arch, args.shape, args.fm_chips, out_dir,
+                 smoke=args.smoke, force=args.force)
+        return
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
     for arch, shape in cells:

@@ -98,13 +98,18 @@ def apply_mamba(
     if constrain_fn is not None:
         x_in = constrain_fn(x_in, ("batch", "seq", "act_mamba"))
         z = constrain_fn(z, ("batch", "seq", "act_mamba"))
-    # causal depthwise conv over S
-    conv_w = cast_to(p["conv_w"], dt_)  # (di, cw)
-    rhs = conv_w.T[:, None, :]  # (cw, 1, di)
+    # causal depthwise conv over S — accumulated in fp32 and rounded to the
+    # model dtype ONCE, so prefill and per-token decode (which computes the
+    # same window as an explicit fp32 sum) round identically; in bf16 the
+    # two paths drift ~1e-2 per layer, which deep hybrids (jamba: 7 mamba
+    # layers per period) compound past decode-vs-prefill test tolerance
+    rhs = p["conv_w"].astype(jnp.float32).T[:, None, :]  # (cw, 1, di)
     x_conv = lax.conv_general_dilated(
-        x_in, rhs, window_strides=(1,), padding=[(mc.d_conv - 1, 0)],
+        x_in.astype(jnp.float32), rhs, window_strides=(1,),
+        padding=[(mc.d_conv - 1, 0)],
         dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=di)
-    x_conv = jax.nn.silu(x_conv + cast_to(p["conv_b"], dt_)[None, None])
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(jnp.float32)[None, None])
+    x_conv = cast_to(x_conv, dt_)
     dt, b_ssm, c_ssm = _split_xdb(p, x_conv, cfg)
     a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
     y, h_last = selective_scan(
@@ -131,11 +136,14 @@ def apply_mamba_decode(
     dt_ = cfg.dtype
     xz = cast_to(x[:, 0], dt_) @ cast_to(p["in_proj"], dt_)  # (B, 2di)
     x_in, z = jnp.split(xz, 2, axis=-1)
-    # conv over [state, x_in]
-    conv_w = cast_to(p["conv_w"], dt_)  # (di, cw)
-    window = jnp.concatenate([cache["conv"].astype(dt_), x_in[..., None]], axis=-1)
-    x_conv = jnp.sum(window * conv_w[None], axis=-1) + cast_to(p["conv_b"], dt_)[None]
-    x_conv = jax.nn.silu(x_conv)
+    # conv over [state, x_in] — fp32 accumulate + single rounding, matching
+    # apply_mamba's prefill conv bit-for-bit (see comment there)
+    conv_w = p["conv_w"].astype(jnp.float32)  # (di, cw)
+    window = jnp.concatenate([cache["conv"].astype(dt_), x_in[..., None]],
+                             axis=-1)
+    x_conv = jnp.sum(window.astype(jnp.float32) * conv_w[None], axis=-1) \
+        + p["conv_b"].astype(jnp.float32)[None]
+    x_conv = cast_to(jax.nn.silu(x_conv), dt_)
     dt, b_ssm, c_ssm = _split_xdb(p, x_conv[:, None, :], cfg)
     a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
     y, h_new = selective_scan_step(

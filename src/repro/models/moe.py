@@ -34,6 +34,21 @@ from repro.models.layers import cast_to
 from repro.models.param import ann
 
 
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off, across jax versions
+    (top-level ``jax.shard_map``/``check_vma`` vs the older
+    ``jax.experimental.shard_map``/``check_rep``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:  # transition releases kept the check_rep kwarg
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def init_moe(key: jax.Array, cfg: ArchConfig) -> Dict:
     moe = cfg.moe
     d, e, f = cfg.d_model, moe.n_routed_experts, moe.expert_d_ff
@@ -58,6 +73,22 @@ def init_moe(key: jax.Array, cfg: ArchConfig) -> Dict:
         p["sh_down"] = ann(jax.random.normal(keys[6], (fs, d), jnp.float32)
                            / math.sqrt(fs), "mlp", "embed")
     return p
+
+
+def _capacity(t: int, moe, train: bool) -> int:
+    """Per-expert token capacity for a dispatch over ``t`` tokens.
+
+    Training uses the standard Switch/GShard formula (overflow drops are the
+    price of balanced static shapes).  Inference floors the capacity so
+    small-t dispatches (decode steps, tiny eval batches) are effectively
+    dropless — with t=2 decode tokens the formula gives capacity 1 and two
+    tokens picking the same expert silently diverge from prefill.  The
+    ``min(t, ...)`` bound keeps large-t prefill buffers at the formula size."""
+    cap = int(math.ceil(t * moe.top_k / moe.n_routed_experts
+                        * moe.capacity_factor))
+    if not train:
+        cap = min(t, max(cap, 16))
+    return max(cap, 1)
 
 
 def _route(p: Dict, x: jnp.ndarray, cfg: ArchConfig, train: bool):
@@ -194,8 +225,7 @@ def apply_moe(
 
     if not use_shard_map:
         t = b * s
-        cap = max(1, int(math.ceil(t * moe.top_k / moe.n_routed_experts
-                                   * moe.capacity_factor)))
+        cap = _capacity(t, moe, train)
         y = _dispatch_compute_combine(
             x.reshape(t, d), ids.reshape(t, -1), probs.reshape(t, -1),
             p["w_gate"], p["w_up"], p["w_down"], jnp.int32(0), cap, cfg.dtype)
@@ -223,8 +253,7 @@ def apply_moe(
         el = wg.shape[0]
         j = lax.axis_index(model_axis)
         e0 = (j * el).astype(jnp.int32)
-        cap = max(1, int(math.ceil(t * moe.top_k / moe.n_routed_experts
-                                   * moe.capacity_factor)))
+        cap = _capacity(t, moe, train)
         if use_2d_experts:
             # weights arrive d-sharded over the spare axes: slice the
             # replicated tokens to the matching d range, compute partials,
@@ -266,7 +295,6 @@ def apply_moe(
     if has_shared:
         in_specs += [P(None, model_axis), P(None, model_axis), P(model_axis, None)]
         args += [p["sh_gate"], p["sh_up"], p["sh_down"]]
-    y = jax.shard_map(
-        fn, mesh=mesh, in_specs=tuple(in_specs),
-        out_specs=P(bspec, None, None), check_vma=False)(*args)
+    y = _shard_map(fn, mesh, tuple(in_specs),
+                   P(bspec, None, None))(*args)
     return y, aux

@@ -19,7 +19,6 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ernest import ErnestModel

@@ -1,0 +1,102 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface the
+test suite uses (``given``, ``settings``, ``strategies.integers/floats/
+lists/sampled_from``).
+
+The container bakes its dependency set and does not ship hypothesis;
+tests/conftest.py registers this module under ``sys.modules["hypothesis"]``
+**only when the real package is absent**, so environments with hypothesis
+installed (e.g. CI images that include it) get true property-based
+shrinking and this stub never shadows it.
+
+Semantics: ``@given`` runs the wrapped test ``max_examples`` times with
+pseudo-random draws from a deterministic seed (stable across runs, varied
+per test name), re-raising the first failure with the offending example
+attached — no shrinking, same contract otherwise.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example_from(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # like hypothesis: positional strategies bind to the *rightmost*
+        # test parameters; anything to their left stays visible to pytest
+        # as fixtures
+        orig_params = list(inspect.signature(fn).parameters.values())
+        fixture_params = orig_params[:len(orig_params) - len(strats)]
+        example_names = [p.name for p in orig_params[len(fixture_params):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above OR below @given — check both targets
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                example = {name: s.example_from(rng)
+                           for name, s in zip(example_names, strats)}
+                try:
+                    fn(*args, **kwargs, **example)
+                except Exception as e:  # noqa: BLE001 — annotate and re-raise
+                    raise AssertionError(
+                        f"falsifying example (stub run {i + 1}/{n}): "
+                        f"{example!r}") from e
+
+        # pytest must not see the example parameters as fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        return wrapper
+
+    return deco

@@ -6,6 +6,14 @@ from pathlib import Path
 # and benches must see 1 device (dry-run sets 512 in its own process).
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+try:  # hypothesis is optional in the container image; tests only need the
+    import hypothesis  # noqa: F401 — small API surface stubbed below
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
 import jax  # noqa: E402
 import pytest  # noqa: E402
 

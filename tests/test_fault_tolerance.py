@@ -108,7 +108,7 @@ print("ELASTIC_OK")
 def test_elastic_rescale_across_meshes():
     res = subprocess.run(
         [sys.executable, "-c", ELASTIC_SCRIPT],
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},  # backend probing hangs without it
         capture_output=True, text=True, timeout=420)
     assert "ELASTIC_OK" in res.stdout, res.stderr[-2000:]

@@ -59,6 +59,7 @@ print("MOE_2D_OK", rel, rel2)
 def test_moe_2d_matches_reference():
     res = subprocess.run(
         [sys.executable, "-c", SCRIPT],
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},  # backend probing hangs without it
         capture_output=True, text=True, timeout=420)
     assert "MOE_2D_OK" in res.stdout, (res.stdout[-500:], res.stderr[-2000:])

@@ -1,0 +1,99 @@
+"""Planner (core/hemingway.py): the paper's two queries over a small
+registry of analytically-generated algorithm models — fast, no simulator."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CombinedModel,
+    ConvergenceData,
+    ConvergenceModel,
+    ErnestModel,
+    Planner,
+)
+from repro.core.hemingway import PlanDecision
+
+P_STAR = 0.25
+MS = (1, 2, 4, 8)
+
+
+def _combined(gap0: float, rate_c: float, t_base: float,
+              max_iters: int = 20_000) -> CombinedModel:
+    """Analytic algorithm: gap(i, m) = gap0 * exp(-rate_c * i / m) and
+    t_iter(m) = t_base * (1 + 4/m + 0.01*m) — a clean Ernest family."""
+    curves = {}
+    for m in MS:
+        i = np.arange(1, 400)
+        curves[m] = P_STAR + gap0 * np.exp(-rate_c * i / m)
+    conv = ConvergenceModel().fit(
+        ConvergenceData.from_curves(curves, P_STAR))
+    ms = np.asarray(MS, np.float64)
+    times = t_base * (1.0 + 4.0 / ms + 0.01 * ms)
+    sys_model = ErnestModel().fit(ms, np.full(len(ms), 1.0), times)
+    return CombinedModel(sys_model, conv, data_size=1.0, max_iters=max_iters)
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return Planner({
+        "fast_percall_slow_converge": _combined(2.0, 0.02, 1e-3),
+        "slow_percall_fast_converge": _combined(2.0, 0.50, 5e-3),
+    })
+
+
+def test_fastest_to_epsilon_picks_global_argmin(planner):
+    d = planner.fastest_to_epsilon(1e-3, m_grid=MS)
+    assert isinstance(d, PlanDecision)
+    assert d.algorithm in planner.models
+    assert d.m in MS
+    # the decision must be the argmin of its own table
+    best_key = min(d.table, key=d.table.get)
+    assert (d.algorithm, d.m) == best_key
+    assert d.predicted_time == pytest.approx(d.table[best_key])
+    assert d.predicted_time > 0
+
+
+def test_fastest_to_epsilon_table_is_consistent(planner):
+    d = planner.fastest_to_epsilon(1e-3, m_grid=MS)
+    # every feasible (algorithm, m) appears with the model's own prediction
+    for (name, m), t in d.table.items():
+        assert name in planner.models and m in MS
+        assert t == pytest.approx(
+            planner.models[name].time_to_epsilon(1e-3, m), rel=1e-9)
+    # table values for one algorithm agree with iters * f(m)
+    for name, model in planner.models.items():
+        for m in MS:
+            iters = model.iters_to_epsilon(1e-3, m)
+            if iters is not None:
+                assert (name, m) in d.table
+
+
+def test_fastest_to_epsilon_no_feasible_raises():
+    # gap can never get below gap0*exp(-rate*max_iters/m); ask for far less
+    tight = Planner({"only": _combined(2.0, 1e-6, 1e-3, max_iters=100)})
+    with pytest.raises(ValueError, match="no \\(algorithm, m\\) reaches"):
+        tight.fastest_to_epsilon(1e-12, m_grid=MS)
+
+
+def test_best_within_budget_full_table_and_argmin(planner):
+    d = planner.best_within_budget(2.0, m_grid=MS)
+    # budget query is always feasible: the table covers the full grid
+    assert set(d.table) == {(n, m) for n in planner.models for m in MS}
+    best_key = min(d.table, key=d.table.get)
+    assert (d.algorithm, d.m) == best_key
+    assert d.predicted_value == pytest.approx(d.table[best_key])
+    for (name, m), v in d.table.items():
+        assert v == pytest.approx(
+            float(planner.models[name].h(2.0, m)[0]), rel=1e-9)
+
+
+def test_budget_monotonicity(planner):
+    """More budget can only improve the best achievable objective."""
+    v_small = planner.best_within_budget(0.5, m_grid=MS).predicted_value
+    v_large = planner.best_within_budget(50.0, m_grid=MS).predicted_value
+    assert v_large <= v_small + 1e-9
+
+
+def test_fastest_to_epsilon_easier_target_is_faster(planner):
+    t_loose = planner.fastest_to_epsilon(1e-1, m_grid=MS).predicted_time
+    t_tight = planner.fastest_to_epsilon(1e-3, m_grid=MS).predicted_time
+    assert t_loose <= t_tight + 1e-9
