@@ -1,0 +1,120 @@
+"""Compare two ``benchmarks.run --json`` payloads and gate perf regressions.
+
+Usage:
+  python -m benchmarks.compare BASELINE.json CURRENT.json [--max-ratio 2.5]
+      [--min-us 1000]
+
+Exit-code contract (consumed by the CI ``perf-smoke`` job):
+  0  no comparable row regressed beyond ``--max-ratio``
+  1  at least one comparable row regressed (ratio > max-ratio), or a
+     comparable category produced an ``/ERROR`` row in CURRENT that the
+     baseline did not have
+  2  invocation/environment problem: missing file, unreadable JSON, or the
+     two payloads share no comparable rows
+
+Which rows are compared ("pure-python" rows): CI runners have noisy clocks
+and no accelerator, so only rows whose cost is dominated by Python/numpy/JAX
+CPU work are gated —
+
+* rows under ``kernels/`` (Pallas interpret-mode microbenches) and
+  ``roofline/`` (dry-run artifact summaries, absent in CI) are excluded;
+* rows with a baseline ``us_per_call`` below ``--min-us`` are excluded: the
+  harness reuses that column for derived non-time metrics (counts, ids) and
+  sub-millisecond timings are below the shared-runner noise floor;
+* rows present in only one payload are reported but never gated.
+
+The baseline was measured on a different machine than the CI runner; the
+generous 2.5x default absorbs machine-speed variance, so this gate catches
+order-of-magnitude algorithmic regressions, not single-digit-percent drift.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EXCLUDED_PREFIXES = ("kernels/", "roofline/")
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def comparable(name: str, baseline_us: float, min_us: float) -> bool:
+    if name.startswith(EXCLUDED_PREFIXES):
+        return False
+    return baseline_us >= min_us
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-ratio",
+        type=float,
+        default=2.5,
+        help="fail when current/baseline exceeds this (default 2.5)",
+    )
+    ap.add_argument(
+        "--min-us",
+        type=float,
+        default=1000.0,
+        help="ignore rows whose baseline is below this many us",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        base = load_rows(args.baseline)
+        cur = load_rows(args.current)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"compare: cannot load payloads: {e}", file=sys.stderr)
+        return 2
+
+    regressions = []
+    errors = []
+    compared = 0
+    for name, base_us in sorted(base.items()):
+        if not comparable(name, base_us, args.min_us):
+            continue
+        if name not in cur:
+            # a vanished row usually means its producer errored; the /ERROR
+            # sweep below turns that into a failure
+            print(f"  [skip] {name}: missing from current")
+            continue
+        compared += 1
+        ratio = cur[name] / base_us
+        marker = "REGRESSION" if ratio > args.max_ratio else "ok"
+        print(
+            f"  [{marker}] {name}: {base_us:.0f} -> {cur[name]:.0f} us "
+            f"({ratio:.2f}x)"
+        )
+        if ratio > args.max_ratio:
+            regressions.append((name, ratio))
+    for name in sorted(cur):
+        if name.endswith("/ERROR") and not name.startswith(EXCLUDED_PREFIXES):
+            if name not in base and name not in errors:
+                errors.append(name)
+
+    if compared == 0:
+        print("compare: no comparable rows between payloads", file=sys.stderr)
+        return 2
+    if errors:
+        print(f"compare: ERROR rows in current: {errors}", file=sys.stderr)
+        return 1
+    if regressions:
+        print(
+            f"compare: {len(regressions)} row(s) regressed beyond "
+            f"{args.max_ratio}x: {regressions}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"compare: {compared} rows within {args.max_ratio}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,12 +8,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ConvergenceData, ConvergenceModel, ErnestModel
+from repro.core import ConvergenceData, ErnestModel
 from repro.optim import BSPCluster, ERMProblem, synthetic_mnist
 from repro.optim.simcluster import SimResult, solve_reference
 

@@ -9,7 +9,6 @@ import numpy as np
 from benchmarks.context import BenchContext
 from repro.core import (
     CombinedModel,
-    ConvergenceData,
     ConvergenceModel,
     Planner,
     r2_score,

@@ -8,7 +8,6 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Row = Tuple[str, float, str]
 

@@ -7,6 +7,12 @@ the BSP comm model, and picks the m that reaches a target loss fastest.
 
   PYTHONPATH=src python examples/autotune_lm.py
 """
+import os
+
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import numpy as np
 
 from repro.core import (CombinedModel, ConvergenceData, ConvergenceModel,

@@ -7,6 +7,12 @@ and resumes — the full elastic loop on CPU.
 
   PYTHONPATH=src python examples/elastic_train.py
 """
+import os
+
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import tempfile
 
 import numpy as np

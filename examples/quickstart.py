@@ -6,6 +6,12 @@ planner the paper's two questions.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import jax.numpy as jnp
 import numpy as np
 

@@ -9,9 +9,13 @@ Fig 5 (forward prediction) and the Ernest accuracy claim.
 --full uses the paper-scale 60000x784 dataset and m up to 128 (slow on CPU;
 the default is a structurally identical scaled-down run).
 """
-import argparse
+import os
 
-import numpy as np
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
 
 from benchmarks.context import get_context
 from benchmarks import figures

@@ -8,8 +8,13 @@ hardware.
 
   PYTHONPATH=src python examples/train_100m.py --steps 200
 """
+import os
+
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import argparse
-import dataclasses
 import tempfile
 
 from repro.configs.base import ArchConfig, LayerSpec
@@ -60,7 +65,7 @@ def main():
                                        args.global_batch, seed=0)
         trainer._build_state()
         trainer._step_fn = trainer._make_step()
-        last = trainer.run()
+        trainer.run()
         losses = [l for _, l in trainer.history]
         print(f"trained {trainer.step} steps: loss {losses[0]:.3f} -> "
               f"{losses[-1]:.3f}")

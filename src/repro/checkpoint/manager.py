@@ -151,7 +151,7 @@ class CheckpointManager:
                 arr = z[k]
                 want = dtypes.get(k, str(arr.dtype))
                 if want != str(arr.dtype):
-                    import ml_dtypes
+                    import ml_dtypes  # noqa: F401 — registers np views
                     arr = arr.view(np.dtype(want))
                 flat[k] = arr
         return _unflatten(flat), manifest["metadata"]

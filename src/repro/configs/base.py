@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Literal, Optional, Sequence, Tuple
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]

@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.configs.base import ArchConfig, MambaConfig, MLAConfig, MoEConfig, ShapeSpec
+from repro.configs.base import ArchConfig, MambaConfig, MLAConfig, ShapeSpec
 
 
 def smoke_variant(cfg: ArchConfig) -> ArchConfig:

@@ -10,7 +10,7 @@ the vocab with a repeating n-gram structure so tiny LMs have signal to fit
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

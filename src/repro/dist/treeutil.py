@@ -34,6 +34,26 @@ def map_axes(fn: Callable[[tuple], Any], axes_tree: Any) -> Any:
     raise TypeError(f"not an axes tree node: {axes_tree!r}")
 
 
+def map_zip_with_axes(fn: Callable[..., Any], value_tree: Any,
+                      other_tree: Any, axes_tree: Any) -> Any:
+    """Like ``map_with_axes`` but zips a second value tree:
+    ``fn(value_leaf, other_leaf, axes_leaf)``.  Used by the serve subsystem
+    to pair a paged cache with a prefill cache plus their axes."""
+    if isinstance(value_tree, dict):
+        return {k: map_zip_with_axes(fn, v, other_tree[k], axes_tree[k])
+                for k, v in value_tree.items()}
+    if isinstance(value_tree, (tuple, list)):
+        if isinstance(value_tree, tuple) and hasattr(value_tree, "_fields"):
+            return type(value_tree)(*(map_zip_with_axes(fn, v, o, a)
+                                      for v, o, a in zip(value_tree,
+                                                         other_tree,
+                                                         axes_tree)))
+        return type(value_tree)(map_zip_with_axes(fn, v, o, a)
+                                for v, o, a in zip(value_tree, other_tree,
+                                                   axes_tree))
+    return fn(value_tree, other_tree, axes_tree)
+
+
 def map_with_axes(fn: Callable[[Any, Any], Any], value_tree: Any,
                   axes_tree: Any) -> Any:
     """Map ``fn(value_leaf, axes_leaf)`` over a value tree, walking the

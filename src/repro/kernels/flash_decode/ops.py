@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.ops import decode_attention

@@ -11,7 +11,6 @@ O(S * Dn * N) a naive materialized scan would move.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

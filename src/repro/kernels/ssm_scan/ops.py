@@ -13,7 +13,6 @@ The Pallas kernel (kernel.py) implements the same chunking with the
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -35,7 +35,6 @@ import numpy as np
 from repro.configs import (ARCH_IDS, applicable_shapes, get_config,
                            get_smoke_config)
 from repro.configs.base import SHAPES_BY_NAME, ShapeSpec
-from repro.dist.hlo_analysis import collective_bytes, collective_wire_bytes
 from repro.dist.hlo_costs import analyze_hlo
 from repro.dist.partitioning import Rules
 from repro.launch.inputs import (

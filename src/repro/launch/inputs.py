@@ -6,7 +6,7 @@ the dry-run uses for every (arch x shape x mesh) cell.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,107 +1,210 @@
-"""Batched serving driver: prefill + decode loop with a KV/state cache.
+"""Serving CLI — thin front end over the ``repro.serve`` subsystem.
 
-CPU demo (smoke config):
+Continuous batching (paged KV cache, join-on-arrival, prefix reuse,
+Hemingway capacity planning):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --continuous
+
+runs a mixed-length 8-request trace with staggered arrivals and shared
+prompt heads, checks prefix-reuse logits against a cold prefill bit-for-bit,
+and prints the fitted f(b) step model plus a capacity plan (what replica
+count m and max-batch hit a p50 target at a given QPS).
+
+Static batch (the original demo, now also served by the engine):
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
       --batch 4 --prompt-len 16 --gen 16
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.models.model import LM
-from repro.models.runtime import Runtime
+from repro.serve import CapacityPlanner, ServeEngine
 
 
 class Server:
+    """Batch-synchronous facade kept for tests/back-compat; every request is
+    admitted at step 0 and decoded by the continuous engine."""
+
     def __init__(self, arch: str, smoke: bool = True, max_seq: int = 128,
-                 mesh=None, rules=None, seed: int = 0):
-        self.cfg = get_smoke_config(arch) if smoke else get_config(arch)
-        rt = Runtime(mesh=mesh, rules=rules, remat="none",
-                     block_q=64, block_k=64, scan_chunk=32)
-        self.lm = LM(self.cfg, rt)
-        self.params, _ = self.lm.init(jax.random.PRNGKey(seed))
+                 mesh=None, rules=None, seed: int = 0, page_size: int = 16):
+        if mesh is not None or rules is not None:
+            raise NotImplementedError(
+                "sharded serving is not supported by the paged engine yet; "
+                "pass mesh=None, rules=None")
+        self.arch = arch
+        self.smoke = smoke
         self.max_seq = max_seq
-        self._prefill = jax.jit(self.lm.prefill)
-        self._decode = jax.jit(self.lm.decode_step, donate_argnums=(3,))
+        self.seed = seed
+        self.page_size = page_size
+        self._engine: Optional[ServeEngine] = None
+        self.cfg = ServeEngine.config_for(arch, smoke)
 
-    # ------------------------------------------------------------------
-    def _grow_cache(self, prefill_cache, batch: int, prompt_len: int):
-        """Copy the prefill cache (length P) into a max_seq-capacity cache."""
-        full = self.lm.init_cache(batch, self.max_seq)
-
-        def merge(full_leaf, pre_leaf):
-            if full_leaf.shape == pre_leaf.shape:  # mamba state: no seq dim
-                return pre_leaf.astype(full_leaf.dtype)
-            # locate the sequence axis: the dim where sizes differ
-            for ax in range(full_leaf.ndim):
-                if full_leaf.shape[ax] != pre_leaf.shape[ax]:
-                    break
-            idx = [slice(None)] * full_leaf.ndim
-            idx[ax] = slice(0, pre_leaf.shape[ax])
-            return full_leaf.at[tuple(idx)].set(pre_leaf.astype(full_leaf.dtype))
-
-        return jax.tree.map(merge, full, prefill_cache)
+    def _make_engine(self, batch: int) -> ServeEngine:
+        if self._engine is None or self._engine.max_batch != batch:
+            self._engine = ServeEngine(
+                self.arch, smoke=self.smoke, max_batch=batch,
+                page_size=self.page_size, max_seq=self.max_seq,
+                seed=self.seed)
+        return self._engine
 
     def generate(self, prompts: np.ndarray, gen_tokens: int,
                  frontend_embeds: Optional[np.ndarray] = None,
                  greedy: bool = True) -> Dict:
         """prompts: (B, P) int32. Returns generated tokens + timing stats."""
-        b, p = prompts.shape
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      None if frontend_embeds is None
-                                      else jnp.asarray(frontend_embeds))
-        cache = self._grow_cache(cache, b, p + self.cfg.n_frontend_tokens)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
-        lengths = jnp.full((b,), p + self.cfg.n_frontend_tokens, jnp.int32)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out = [np.asarray(tok)]
-        t1 = time.perf_counter()
-        for _ in range(gen_tokens - 1):
-            logits, cache = self._decode(self.params, tok, lengths, cache)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            lengths = lengths + 1
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t1
-        tokens = np.stack(out, axis=1)
+        assert greedy, "only greedy decoding is supported"
+        b, _ = prompts.shape
+        eng = self._make_engine(b)
+        n_before = len(eng.telemetry)  # engine may be reused across calls
+        reqs = []
+        for i in range(b):
+            fe = None if frontend_embeds is None else frontend_embeds[i]
+            reqs.append(eng.submit(np.asarray(prompts[i], np.int32),
+                                   gen_tokens, frontend_embeds=fe))
+        eng.run()
+        tokens = np.stack([np.asarray(r.generated, np.int32) for r in reqs])
+        this_call = [t for t in eng.telemetry[n_before:] if t["batch"] > 0]
+        t_decode = sum(t["step_s"] for t in this_call)
+        n_tok = sum(t["batch"] for t in this_call)
         return {
             "tokens": tokens,
-            "prefill_s": t_prefill,
+            "prefill_s": sum(r.prefill_s for r in reqs),
             "decode_s": t_decode,
-            "decode_tok_per_s": b * max(gen_tokens - 1, 1) / max(t_decode, 1e-9),
+            "decode_tok_per_s": n_tok / t_decode if t_decode else 0.0,
         }
+
+
+def _mixed_trace(eng: ServeEngine, n_requests: int, seed: int):
+    """Mixed prompt lengths, bursty arrivals, one shared prompt head."""
+    rng = np.random.RandomState(seed)
+    ps = eng.page_size
+    shared_head = rng.randint(0, eng.cfg.vocab_size, 2 * ps).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        if i % 3 == 0:  # every third request shares the prompt head
+            tail = rng.randint(0, eng.cfg.vocab_size,
+                               3 + rng.randint(0, ps)).astype(np.int32)
+            prompt = np.concatenate([shared_head, tail])
+        else:
+            plen = int(rng.choice([7, 12, 21, 30]))
+            prompt = rng.randint(0, eng.cfg.vocab_size, plen).astype(np.int32)
+        gen = int(rng.choice([4, 6, 8]))
+        arrival = (i // 2) * 2  # bursty: pairs arrive together
+        fe = None
+        if eng.cfg.n_frontend_tokens:
+            fe = (rng.randn(eng.cfg.n_frontend_tokens, eng.cfg.d_model)
+                  * 0.02).astype(np.float32)
+        reqs.append(eng.submit(prompt, gen, arrival_step=arrival,
+                               frontend_embeds=fe))
+    return reqs
+
+
+def _verify_prefix_reuse(arch: str, smoke: bool, eng: ServeEngine,
+                         seed: int) -> bool:
+    """Serve one prefix-sharing prompt on the warm engine and the same
+    prompt cold; logits must match bit-for-bit."""
+    rng = np.random.RandomState(seed + 1)
+    ps = eng.page_size
+    head = rng.randint(0, eng.cfg.vocab_size, 2 * ps).astype(np.int32)
+    pA = np.concatenate([head, rng.randint(0, eng.cfg.vocab_size, 5)
+                         .astype(np.int32)])
+    pB = np.concatenate([head, rng.randint(0, eng.cfg.vocab_size, 9)
+                         .astype(np.int32)])
+    eng.collect_logits = True
+    eng.submit(pA, 4)
+    eng.run()
+    rB = eng.submit(pB, 4)
+    eng.run()
+    cold = ServeEngine(arch, smoke=smoke, max_batch=eng.max_batch,
+                       page_size=ps, max_seq=eng.max_seq, seed=eng.seed,
+                       collect_logits=True)
+    rB_cold = cold.submit(pB, 4)
+    cold.run()
+    shared = rB.n_shared_pages
+    exact = all(np.array_equal(a, b)
+                for a, b in zip(rB.logits_trace, rB_cold.logits_trace))
+    print(f"prefix reuse: shared_pages={shared} "
+          f"bit_identical={'yes' if exact else 'NO'}")
+    return shared > 0 and exact
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (default; --no-smoke serves the "
+                         "full architecture)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="mixed-length trace with join-on-arrival + "
+                         "prefix-reuse verification + capacity plan")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    server = Server(args.arch, smoke=args.smoke,
-                    max_seq=args.prompt_len + args.gen + 8)
-    rng = np.random.RandomState(0)
-    prompts = rng.randint(0, server.cfg.vocab_size,
-                          (args.batch, args.prompt_len)).astype(np.int32)
-    fe = None
-    if server.cfg.n_frontend_tokens:
-        fe = rng.randn(args.batch, server.cfg.n_frontend_tokens,
-                       server.cfg.d_model).astype(np.float32) * 0.02
-    res = server.generate(prompts, args.gen, fe)
-    print(f"generated {res['tokens'].shape} tokens; "
-          f"prefill {res['prefill_s']*1e3:.0f} ms, "
-          f"decode {res['decode_tok_per_s']:.1f} tok/s")
+
+    if not args.continuous:
+        server = Server(args.arch, smoke=args.smoke,
+                        max_seq=args.prompt_len + args.gen + 8,
+                        page_size=args.page_size)
+        rng = np.random.RandomState(args.seed)
+        prompts = rng.randint(0, server.cfg.vocab_size,
+                              (args.batch, args.prompt_len)).astype(np.int32)
+        fe = None
+        if server.cfg.n_frontend_tokens:
+            fe = rng.randn(args.batch, server.cfg.n_frontend_tokens,
+                           server.cfg.d_model).astype(np.float32) * 0.02
+        res = server.generate(prompts, args.gen, fe)
+        print(f"generated {res['tokens'].shape} tokens; "
+              f"prefill {res['prefill_s']*1e3:.0f} ms, "
+              f"decode {res['decode_tok_per_s']:.1f} tok/s")
+        return
+
+    eng = ServeEngine(args.arch, smoke=args.smoke, max_batch=args.max_batch,
+                      page_size=args.page_size,
+                      max_seq=64 + args.page_size * 2, seed=args.seed)
+    reqs = _mixed_trace(eng, args.requests, args.seed)
+    stats = eng.run()
+    done = [r for r in reqs if r.finished_step >= 0]
+    print(f"served {len(done)}/{len(reqs)} requests in {eng.step_count} steps "
+          f"(mean batch {stats['mean_batch']:.2f}, "
+          f"{stats['decode_tok_per_s']:.1f} tok/s, "
+          f"prefix hits {stats.get('prefix_hits', 0)})")
+    joins = sum(1 for r in reqs if r.admitted_step > 0)
+    print(f"join-on-arrival: {joins} requests joined a running batch")
+
+    planner = CapacityPlanner()
+    planner.observe_telemetry(eng.telemetry)
+    try:
+        planner.fit()
+    except ValueError as e:
+        print(f"capacity plan: insufficient telemetry ({e})")
+    else:
+        t1, t8 = planner.step_time(1), planner.step_time(8)
+        print(f"f(b) step model: t(1)={t1*1e3:.1f} ms  t(8)={t8*1e3:.1f} ms  "
+              f"coeffs={planner.step_model.coefficients()}")
+        try:
+            plan = planner.plan(target_p50_s=max(10 * t8 * 8, 1e-3), qps=2.0,
+                                gen_tokens=8, batch_grid=[1, 2, 4, 8],
+                                m_grid=[1, 2, 4, 8, 16])
+            print(f"capacity plan: {plan.algorithm} on m={plan.m} replicas "
+                  f"(predicted p50 {plan.predicted_time*1e3:.1f} ms)")
+        except ValueError as e:
+            print(f"capacity plan: no feasible operating point ({e})")
+
+    ok = _verify_prefix_reuse(args.arch, args.smoke, eng, args.seed)
+    if not ok:
+        print("FAIL: prefix-reuse verification")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -14,19 +14,16 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from pathlib import Path
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.compression.gradient import CompressionConfig, GradientCompressor
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import SyntheticTokens
 from repro.dist.partitioning import Rules
-from repro.launch.inputs import params_sds
 from repro.models.model import LM
 from repro.models.runtime import Runtime
 from repro.runtime.failures import FailureInjector, RestartPolicy, SimulatedFailure

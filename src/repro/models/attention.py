@@ -121,6 +121,45 @@ def apply_attention(
     return y, cache
 
 
+def apply_attention_decode_paged(
+    p: Dict,
+    x: jnp.ndarray,  # (B, 1, d) one new token
+    cfg: ArchConfig,
+    cache: Dict,  # k/v pages: (n_pages, Hk, page_size, hd)
+    lengths: jnp.ndarray,  # (B,) current fill (also = new token position)
+    page_tables: jnp.ndarray,  # (B, pages_per_seq) physical page ids
+    *,
+    page_size: int,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Paged-KV decode: scatter the new token's K/V into its page, gather the
+    request's pages into a contiguous (B, Hk, S, hd) view, and run the
+    existing ``decode_attention`` kernel on it."""
+    b = x.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions, None)
+    # new-token K/V: (B, 1, Hk, hd) -> (B, Hk, hd)
+    k_new = k[:, 0]
+    v_new = v[:, 0]
+    page_idx = lengths // page_size
+    offset = lengths % page_size
+    pid = jnp.take_along_axis(page_tables, page_idx[:, None], axis=1)[:, 0]
+    k_pages = cache["k"].at[pid, :, offset, :].set(
+        k_new.astype(cache["k"].dtype))
+    v_pages = cache["v"].at[pid, :, offset, :].set(
+        v_new.astype(cache["v"].dtype))
+    # gather: (B, P, Hk, page, hd) -> (B, Hk, P*page, hd)
+    n_pp = page_tables.shape[1]
+    hk, hd = k_pages.shape[1], k_pages.shape[3]
+    k_full = k_pages[page_tables].transpose(0, 2, 1, 3, 4).reshape(
+        b, hk, n_pp * page_size, hd)
+    v_full = v_pages[page_tables].transpose(0, 2, 1, 3, 4).reshape(
+        b, hk, n_pp * page_size, hd)
+    out = decode_attention(q[:, 0], k_full, v_full, lengths + 1)  # (B, H, hd)
+    y = out.reshape(b, cfg.n_heads * cfg.head_dim) @ cast_to(
+        p["wo"], cfg.dtype)
+    return y[:, None, :], {"k": k_pages, "v": v_pages}
+
+
 def apply_attention_decode(
     p: Dict,
     x: jnp.ndarray,  # (B, 1, d) one new token

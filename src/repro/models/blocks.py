@@ -95,6 +95,44 @@ def apply_block(
     return x, cache, aux
 
 
+def apply_block_decode_paged(
+    p: Dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    rt: Runtime,
+    cache: Dict,
+    lengths: jnp.ndarray,
+    page_tables: jnp.ndarray,  # (B, pages_per_seq) physical page ids
+) -> Tuple[jnp.ndarray, Dict]:
+    """Decode step against a paged cache: attention/MLA leaves are page-major
+    ((n_pages, ..., page_size, ...)); mamba state leaves are slot-major and
+    use the regular decode path unchanged."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        if _uses_mla(cfg):
+            y, new_cache = mla_mod.apply_mla_decode_paged(
+                p["mixer"], h, cfg, cache, lengths, page_tables,
+                page_size=rt.page_size, absorb=rt.mla_absorb)
+        else:
+            y, new_cache = attn_mod.apply_attention_decode_paged(
+                p["mixer"], h, cfg, cache, lengths, page_tables,
+                page_size=rt.page_size)
+    else:
+        y, new_cache = mamba_mod.apply_mamba_decode(
+            p["mixer"], h, cfg, cache, constrain_fn=rt.constrain_fn)
+    x = x + y
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            y2 = apply_mlp(p["ffn"], h2, cfg.dtype, rt.constrain_fn)
+        else:
+            y2, _ = moe_mod.apply_moe(
+                p["ffn"], h2, cfg, train=False, mesh=rt.mesh, rules=rt.rules)
+        x = x + y2
+    return x, new_cache
+
+
 def apply_block_decode(
     p: Dict,
     x: jnp.ndarray,  # (B, 1, d)

@@ -132,7 +132,6 @@ def apply_mamba_decode(
     *,
     constrain_fn=None,
 ) -> Tuple[jnp.ndarray, Dict]:
-    mc = cfg.mamba
     dt_ = cfg.dtype
     xz = cast_to(x[:, 0], dt_) @ cast_to(p["in_proj"], dt_)  # (B, 2di)
     x_in, z = jnp.split(xz, 2, axis=-1)

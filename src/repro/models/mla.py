@@ -161,11 +161,67 @@ def apply_mla_decode(
         ckv_c = constrain_fn(ckv_c, MLA_CACHE_AXES["ckv"])
         kpe_c = constrain_fn(kpe_c, MLA_CACHE_AXES["kpe"])
     new_cache = {"ckv": ckv_c, "kpe": kpe_c}
+    out = _mla_decode_attn(p, q_nope[:, 0], q_pe[:, 0], ckv_c, kpe_c,
+                           lengths + 1, cfg, absorb=absorb, chunk=chunk)
+    y = out.reshape(b, h * m.v_head_dim) @ cast_to(p["wo"], dt)
+    return y[:, None, :], new_cache
+
+
+def apply_mla_decode_paged(
+    p: Dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    cfg: ArchConfig,
+    cache: Dict,  # ckv pages (n_pages, page_size, r); kpe (n_pages, page_size, rope)
+    lengths: jnp.ndarray,  # (B,)
+    page_tables: jnp.ndarray,  # (B, pages_per_seq)
+    *,
+    page_size: int,
+    absorb: bool = False,
+    chunk: int = 2048,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Paged latent-cache decode: scatter the new (c_kv, k_pe) into its page,
+    gather this batch's pages into contiguous views, then run the same
+    latent-attention core as the contiguous path."""
+    m, dt = cfg.mla, cfg.dtype
+    b = x.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv_new, kpe_new = _mla_kv_latent(p, x, cfg, positions)
+    page_idx = lengths // page_size
+    offset = lengths % page_size
+    pid = jnp.take_along_axis(page_tables, page_idx[:, None], axis=1)[:, 0]
+    ckv_pages = cache["ckv"].at[pid, offset, :].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kpe_pages = cache["kpe"].at[pid, offset, :].set(
+        kpe_new[:, 0].astype(cache["kpe"].dtype))
+    n_pp = page_tables.shape[1]
+    ckv_c = ckv_pages[page_tables].reshape(b, n_pp * page_size, m.kv_lora_rank)
+    kpe_c = kpe_pages[page_tables].reshape(b, n_pp * page_size,
+                                           m.qk_rope_head_dim)
+    out = _mla_decode_attn(p, q_nope[:, 0], q_pe[:, 0], ckv_c, kpe_c,
+                           lengths + 1, cfg, absorb=absorb, chunk=chunk)
+    y = out.reshape(b, cfg.n_heads * m.v_head_dim) @ cast_to(p["wo"], dt)
+    return y[:, None, :], {"ckv": ckv_pages, "kpe": kpe_pages}
+
+
+def _mla_decode_attn(
+    p: Dict,
+    q_nope1: jnp.ndarray,  # (B, H, nope)
+    q_pe1: jnp.ndarray,    # (B, H, rope)
+    ckv_c: jnp.ndarray,    # (B, S, r) latent cache incl. the new token
+    kpe_c: jnp.ndarray,    # (B, S, rope)
+    lens1: jnp.ndarray,    # (B,) valid lengths incl. the new token
+    cfg: ArchConfig,
+    *,
+    absorb: bool,
+    chunk: int,
+) -> jnp.ndarray:
+    """Shared decode attention over a contiguous latent cache view; returns
+    (B, H, v_head_dim)."""
+    m, dt = cfg.mla, cfg.dtype
+    b, h = q_nope1.shape[0], cfg.n_heads
     s_max = ckv_c.shape[1]
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    lens1 = lengths + 1
-    q_nope1 = q_nope[:, 0]  # (B,H,nope)
-    q_pe1 = q_pe[:, 0]      # (B,H,rope)
     wkv_b = cast_to(p["wkv_b"], dt).reshape(
         m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
     wk = wkv_b[..., : m.qk_nope_head_dim]   # (r,H,nope)
@@ -223,5 +279,4 @@ def apply_mla_decode(
         (acc, _, l), _ = lax.scan(chunk_step, init, jnp.arange(nchunks))
         out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(dt)
 
-    y = out.reshape(b, h * m.v_head_dim) @ cast_to(p["wo"], dt)
-    return y[:, None, :], new_cache
+    return out

@@ -239,3 +239,39 @@ class LM:
         head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
         logits = lm_logits(head, x[:, 0], cfg.dtype)
         return logits, {"head": tuple(new_head), "periods": new_periods}
+
+    def decode_step_paged(self, params, tokens: jnp.ndarray,
+                          lengths: jnp.ndarray, cache: Dict,
+                          page_tables: jnp.ndarray):
+        """Page-table-aware decode entry point (serving).
+
+        ``cache`` mirrors ``init_cache`` but attention/MLA leaves are keyed by
+        physical page ((n_pages, ..., page_size, ...), see
+        ``repro.serve.cache.init_paged_cache``) and recurrent-state leaves by
+        slot.  ``page_tables`` (B, pages_per_seq) int32 maps each sequence's
+        logical pages to physical pages; page 0 is the scratch page that idle
+        slots write into.  Returns (logits (B,V), new_cache)."""
+        cfg, rt = self.cfg, self.rt
+        x = embed_tokens(params["embed"], tokens[:, None], cfg.dtype)
+        new_head = []
+        for hp, hc in zip(params.get("head_layers", ()), cache["head"]):
+            x, c = blocks_mod.apply_block_decode_paged(
+                hp, x, cfg, self._head_spec(), rt, hc, lengths, page_tables)
+            new_head.append(c)
+
+        def period_fn(x, inputs):
+            period_params, cache_in = inputs
+            new_caches = {}
+            for i, spec in enumerate(cfg.period):
+                x, c = blocks_mod.apply_block_decode_paged(
+                    period_params[f"pos{i}"], x, cfg, spec, rt,
+                    cache_in[f"pos{i}"], lengths, page_tables)
+                new_caches[f"pos{i}"] = c
+            return x, new_caches
+
+        x, new_periods = lax.scan(period_fn, x,
+                                  (params["periods"], cache["periods"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = lm_logits(head, x[:, 0], cfg.dtype)
+        return logits, {"head": tuple(new_head), "periods": new_periods}

@@ -21,8 +21,7 @@ semantics); the router aux loss keeps load balanced.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,6 +24,7 @@ class Runtime:
     mla_absorb: bool = False
     remat: str = "full"                     # none | full | dots
     use_pallas: bool = False                # TPU-only kernel path
+    page_size: int = 16                     # paged-KV page length (serving)
 
     def constrain(self, x: jax.Array, axes) -> jax.Array:
         return constrain(x, self.rules, axes)

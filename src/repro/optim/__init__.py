@@ -1,4 +1,6 @@
 """Distributed optimization algorithms modeled by Hemingway."""
+
+
 from repro.optim.cocoa import CocoaConfig, RunRecord, run_cocoa
 from repro.optim.lbfgs import LBFGSConfig, run_lbfgs
 from repro.optim.problems import ERMProblem, make_mnist_svm, synthetic_mnist
@@ -18,3 +20,26 @@ from repro.optim.simcluster import (
     run_algorithm,
     solve_reference,
 )
+
+__all__ = [
+    "ALGORITHMS",
+    "BSPCluster",
+    "CocoaConfig",
+    "CommModel",
+    "ERMProblem",
+    "GDConfig",
+    "LBFGSConfig",
+    "LocalSGDConfig",
+    "RunRecord",
+    "SGDConfig",
+    "SimResult",
+    "make_mnist_svm",
+    "run_algorithm",
+    "run_cocoa",
+    "run_gd",
+    "run_lbfgs",
+    "run_local_sgd",
+    "run_minibatch_sgd",
+    "solve_reference",
+    "synthetic_mnist",
+]

@@ -13,7 +13,7 @@ arrays (see CheckpointManager.restore_sharded).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 

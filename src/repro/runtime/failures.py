@@ -10,7 +10,7 @@ tests/test_fault_tolerance.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Set
+from typing import Set
 
 
 class SimulatedFailure(RuntimeError):

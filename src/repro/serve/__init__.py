@@ -1,0 +1,23 @@
+"""Continuous-batching serving subsystem (paged KV cache + Hemingway
+capacity planning).  See DESIGN.md §7."""
+
+from repro.serve.cache import init_paged_cache, write_prefill
+from repro.serve.engine import ServeEngine
+from repro.serve.paging import SCRATCH_PAGE, OutOfPages, PagePool
+from repro.serve.planner import CapacityPlanner
+from repro.serve.prefix import PrefixCache
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+__all__ = [
+    "CapacityPlanner",
+    "OutOfPages",
+    "PagePool",
+    "PrefixCache",
+    "Request",
+    "RequestState",
+    "SCRATCH_PAGE",
+    "Scheduler",
+    "ServeEngine",
+    "init_paged_cache",
+    "write_prefill",
+]

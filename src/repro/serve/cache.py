@@ -1,0 +1,125 @@
+"""Paged KV/state cache construction and prefill-to-page writes.
+
+The paged cache mirrors ``LM.init_cache``'s pytree exactly, with two leaf
+transformations driven by the logical cache axes (``LM.cache_axes``):
+
+* leaves with a ``cache_seq`` axis (attention K/V, MLA latents) become
+  *page-major*: the ``cache_batch`` axis is replaced by ``num_pages`` and the
+  sequence axis is truncated to ``page_size`` — one row per physical page,
+  shared by every request via its page table;
+* leaves without a sequence axis (mamba recurrent + conv state) become
+  *slot-major*: the batch axis is sized ``max_batch`` and indexed by the
+  decode slot directly, so the existing mamba decode path runs unchanged.
+
+All writers here are functional (return new trees); the engine owns the
+authoritative tree and threads it through the jitted decode step with
+donation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.treeutil import map_with_axes, map_zip_with_axes
+
+
+def _is_paged(axes: tuple) -> bool:
+    return "cache_seq" in axes
+
+
+def init_paged_cache(lm, *, num_pages: int, page_size: int, max_batch: int):
+    """Zero paged-cache pytree for ``lm`` (see module docstring)."""
+    template = jax.eval_shape(lambda: lm.init_cache(1, page_size))
+    axes = lm.cache_axes()
+
+    def build(leaf, ax):
+        ba = ax.index("cache_batch")
+        shape = list(leaf.shape)
+        shape[ba] = num_pages if _is_paged(ax) else max_batch
+        return jnp.zeros(shape, leaf.dtype)
+
+    return map_with_axes(build, template, axes)
+
+
+def write_prefill(
+    paged: Any,
+    prefill_cache: Any,
+    axes: Any,
+    *,
+    slot: int,
+    page_ids: Sequence[int],
+    page_size: int,
+    skip_pages: int = 0,
+):
+    """Write a batch-1 prefill cache into ``page_ids`` (attention leaves) and
+    decode slot ``slot`` (state leaves).  The last page may be partial; its
+    tail is zero-padded and overwritten by subsequent decode steps.
+
+    ``skip_pages`` leading pages are NOT written: those are prefix-shared,
+    immutable, and may back a request that is still decoding — their content
+    is already bitwise what this prefill computed for the same positions
+    (the engine pins the flash block size so prefix activations are
+    independent of total prompt length)."""
+    pids = jnp.asarray(np.asarray(page_ids[skip_pages:], np.int32))
+
+    def write(paged_leaf, pre_leaf, ax):
+        ba = ax.index("cache_batch")
+        pre = jnp.take(pre_leaf, 0, axis=ba)  # drop the size-1 batch axis
+        if not _is_paged(ax):
+            idx = (slice(None),) * ba + (slot,)
+            return paged_leaf.at[idx].set(pre.astype(paged_leaf.dtype))
+        if len(pids) == 0:
+            return paged_leaf
+        sa = ax.index("cache_seq")
+        sa2 = sa - 1 if ba < sa else sa
+        n_tok = pre.shape[sa2]
+        pad = [(0, 0)] * pre.ndim
+        pad[sa2] = (0, len(page_ids) * page_size - n_tok)
+        pre = jnp.pad(pre, pad)
+        pre = pre.reshape(
+            pre.shape[:sa2] + (len(page_ids), page_size) + pre.shape[sa2 + 1 :]
+        )
+        # drop the shared pages' slices, then land each remaining logical
+        # page on its physical page (page axis replaces the batch axis)
+        pre = jnp.take(pre, np.arange(skip_pages, len(page_ids)), axis=sa2)
+        pre = jnp.moveaxis(pre, sa2, ba)
+        idx = (slice(None),) * ba + (pids,)
+        return paged_leaf.at[idx].set(pre.astype(paged_leaf.dtype))
+
+    return map_zip_with_axes(write, paged, prefill_cache, axes)
+
+
+def snapshot_state(paged: Any, axes: Any, slot: int) -> Dict:
+    """Copy the slot-major (recurrent state) leaves of decode slot ``slot``
+    to host; paged leaves are returned as ``None``.  Used by the prefix cache
+    to support whole-prompt reuse on architectures with mamba layers."""
+
+    def snap(leaf, ax):
+        if _is_paged(ax):
+            return None
+        ba = ax.index("cache_batch")
+        idx = (slice(None),) * ba + (slot,)
+        return np.asarray(leaf[idx])
+
+    return map_with_axes(snap, paged, axes)
+
+
+def restore_state(paged: Any, snapshot: Any, axes: Any, slot: int):
+    """Write a ``snapshot_state`` result back into decode slot ``slot``."""
+
+    def rest(leaf, snap, ax):
+        if snap is None:
+            return leaf
+        ba = ax.index("cache_batch")
+        idx = (slice(None),) * ba + (slot,)
+        return leaf.at[idx].set(jnp.asarray(snap).astype(leaf.dtype))
+
+    return map_zip_with_axes(rest, paged, snapshot, axes)
+
+
+def max_pages_per_seq(max_seq: int, page_size: int) -> int:
+    return -(-max_seq // page_size)

@@ -1,0 +1,267 @@
+"""Continuous-batching serve engine over the paged KV/state cache.
+
+One fixed-shape jitted decode step serves every request: each decode slot
+contributes one token per step, idle slots point at the scratch page, and
+requests join (after a batch-1 prefill writes their pages) or leave between
+steps without draining the batch.  Greedy decoding only.
+
+Time is measured in decode steps; a request's ``arrival_step`` gates its
+admission, which keeps traces deterministic.  Per-step telemetry
+``(active_batch, step_seconds)`` feeds the ``CapacityPlanner``
+(``repro.serve.planner``) — the serve-side analogue of the training f(m)
+loop.
+
+Determinism notes: with a dense architecture every slot's computation is
+independent of the other slots' contents, so a request's token trajectory is
+bit-identical whether it runs alone or joins a busy batch of the same shape
+(``max_batch`` and page geometry fixed).  MoE architectures couple slots
+through expert capacity and do not carry this guarantee.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models.model import LM
+from repro.models.runtime import Runtime
+from repro.serve.cache import (
+    init_paged_cache,
+    max_pages_per_seq,
+    restore_state,
+    snapshot_state,
+    write_prefill,
+)
+from repro.serve.paging import SCRATCH_PAGE, PagePool
+from repro.serve.prefix import PrefixCache
+from repro.serve.scheduler import Request, Scheduler
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        arch: str,
+        *,
+        smoke: bool = True,
+        max_batch: int = 8,
+        page_size: int = 16,
+        max_seq: int = 256,
+        num_pages: Optional[int] = None,
+        seed: int = 0,
+        prefix_caching: bool = True,
+        collect_logits: bool = False,
+        rt: Optional[Runtime] = None,
+    ):
+        self.cfg = self.config_for(arch, smoke)
+        self.seed = seed
+        # block_q = block_k = 16 pins the flash-attention blocking: the
+        # kernel clamps blocks to min(block, max(seq, 16)), so 16 is the one
+        # setting whose block grid never depends on prompt length.  That
+        # makes prefix-position activations — and therefore shared prefix
+        # pages — bitwise independent of what follows them, which is what
+        # lets prefix reuse skip rewriting shared pages (see write_prefill).
+        self.rt = rt or Runtime(
+            remat="none", block_q=16, block_k=16, scan_chunk=32, page_size=page_size
+        )
+        if self.rt.page_size != page_size:
+            raise ValueError("Runtime.page_size must match engine page_size")
+        self.lm = LM(self.cfg, self.rt)
+        self.params, _ = self.lm.init(jax.random.PRNGKey(seed))
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.max_seq = max_seq
+        self.pages_per_seq = max_pages_per_seq(max_seq, page_size)
+        if num_pages is None:
+            num_pages = 1 + max_batch * self.pages_per_seq
+        self.pool = PagePool(num_pages, page_size)
+        self.prefix = PrefixCache(page_size) if prefix_caching else None
+        self.scheduler = Scheduler(
+            max_batch,
+            self.pool,
+            prefix_cache=self.prefix,
+            n_frontend_tokens=self.cfg.n_frontend_tokens,
+        )
+        self.collect_logits = collect_logits
+        self.axes = self.lm.cache_axes()
+        self.cache = init_paged_cache(
+            self.lm,
+            num_pages=num_pages,
+            page_size=page_size,
+            max_batch=max_batch,
+        )
+        self.page_tables = np.full(
+            (max_batch, self.pages_per_seq), SCRATCH_PAGE, np.int32
+        )
+        self.lengths = np.zeros(max_batch, np.int32)
+        self.next_tokens = np.zeros(max_batch, np.int32)
+        self._prefill = jax.jit(self.lm.prefill)
+        self._decode = jax.jit(self.lm.decode_step_paged, donate_argnums=(3,))
+        self.step_count = 0
+        self._rid = 0
+        self.telemetry: List[Dict] = []
+
+    @staticmethod
+    def config_for(arch: str, smoke: bool):
+        return get_smoke_config(arch) if smoke else get_config(arch)
+
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        arrival_step: int = 0,
+        frontend_embeds: Optional[np.ndarray] = None,
+    ) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n_front = 0 if frontend_embeds is None else self.cfg.n_frontend_tokens
+        total = len(prompt) + n_front + max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(
+                f"prompt+generation needs {total} positions > max_seq={self.max_seq}"
+            )
+        req = Request(
+            rid=self._rid,
+            prompt=prompt,
+            max_new_tokens=max_new_tokens,
+            arrival_step=arrival_step,
+            frontend_embeds=frontend_embeds,
+        )
+        if self.collect_logits:
+            req.logits_trace = []
+        self._rid += 1
+        self.scheduler.submit(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request) -> None:
+        """Prefill (or reuse a stored prefill) and seed the decode slot."""
+        slot = req.slot
+        n_front = 0 if req.frontend_embeds is None else self.cfg.n_frontend_tokens
+        if req.prefill_skipped:
+            logits = req.full_entry.last_logits
+            self.cache = restore_state(
+                self.cache, req.full_entry.state, self.axes, slot
+            )
+        else:
+            fe = (
+                None
+                if req.frontend_embeds is None
+                else jnp.asarray(req.frontend_embeds)[None]
+            )
+            t0 = time.perf_counter()
+            logits_dev, pre_cache = self._prefill(
+                self.params, jnp.asarray(req.prompt)[None], fe
+            )
+            logits_dev.block_until_ready()
+            req.prefill_s = time.perf_counter() - t0
+            self.cache = write_prefill(
+                self.cache,
+                pre_cache,
+                self.axes,
+                slot=slot,
+                page_ids=req.page_ids,
+                page_size=self.page_size,
+                skip_pages=req.n_shared_pages,
+            )
+            logits = np.asarray(logits_dev[0])
+            if self.prefix is not None and req.frontend_embeds is None:
+                n_prompt_pages = -(-len(req.prompt) // self.page_size)
+                self.prefix.register(
+                    req.prompt, req.page_ids[:n_prompt_pages], self.pool
+                )
+                self.prefix.register_full(
+                    req.prompt,
+                    req.page_ids[: len(req.prompt) // self.page_size],
+                    logits,
+                    snapshot_state(self.cache, self.axes, slot),
+                    self.pool,
+                )
+        tok = int(np.argmax(logits))
+        req.generated.append(tok)
+        if req.logits_trace is not None:
+            req.logits_trace.append(np.asarray(logits, np.float32).copy())
+        self.lengths[slot] = len(req.prompt) + n_front
+        row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
+        row[: len(req.page_ids)] = req.page_ids
+        self.page_tables[slot] = row
+        self.next_tokens[slot] = tok
+
+    def _release_slot(self, slot: int) -> None:
+        self.lengths[slot] = 0
+        self.next_tokens[slot] = 0
+        self.page_tables[slot] = SCRATCH_PAGE
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit arrived requests, run one batched decode step, retire
+        finished requests.  Returns the number of active requests served."""
+        for req in self.scheduler.admit_ready(self.step_count):
+            self._admit(req)
+            if req.done:  # max_new_tokens == 1: prefill already finished it
+                slot = req.slot
+                self.scheduler.finish(req, self.step_count)
+                self._release_slot(slot)
+        active = self.scheduler.active
+        if not active:
+            self.step_count += 1
+            return 0
+        t0 = time.perf_counter()
+        logits_dev, self.cache = self._decode(
+            self.params,
+            jnp.asarray(self.next_tokens),
+            jnp.asarray(self.lengths),
+            self.cache,
+            jnp.asarray(self.page_tables),
+        )
+        logits_np = np.asarray(logits_dev)
+        dt = time.perf_counter() - t0
+        self.telemetry.append(
+            {"step": self.step_count, "batch": len(active), "step_s": dt}
+        )
+        for req in active:
+            slot = req.slot
+            tok = int(np.argmax(logits_np[slot]))
+            req.generated.append(tok)
+            if req.logits_trace is not None:
+                req.logits_trace.append(logits_np[slot].astype(np.float32).copy())
+            self.lengths[slot] += 1
+            self.next_tokens[slot] = tok
+            if req.done:
+                slot_to_clear = req.slot
+                self.scheduler.finish(req, self.step_count)
+                self._release_slot(slot_to_clear)
+        self.step_count += 1
+        return len(active)
+
+    def run(self, max_steps: int = 100_000) -> Dict:
+        """Drive steps until every submitted request has finished."""
+        while not self.scheduler.drained:
+            if self.step_count >= max_steps:
+                raise RuntimeError(f"trace did not drain in {max_steps} steps")
+            self.step()
+        return self.stats()
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict:
+        steps = [t for t in self.telemetry if t["batch"] > 0]
+        tok = sum(t["batch"] for t in steps)
+        busy = sum(t["step_s"] for t in steps)
+        out: Dict = {
+            "requests_finished": len(self.scheduler.finished),
+            "decode_steps": len(steps),
+            "decode_tokens": tok,
+            "decode_tok_per_s": tok / busy if busy else 0.0,
+            "mean_batch": tok / len(steps) if steps else 0.0,
+            "pages_in_use": self.pool.pages_in_use,
+            "free_pages": self.pool.free_pages,
+        }
+        if self.prefix is not None:
+            out["prefix_hits"] = self.prefix.hits
+            out["prefix_pages_shared"] = self.prefix.pages_shared
+            out["prefills_skipped"] = self.prefix.prefills_skipped
+        return out

@@ -1,0 +1,134 @@
+"""Hemingway capacity planning for the serving fleet.
+
+Hemingway picks the algorithm and cluster size m from a fitted system model
+f(m) (paper §3.2.1; Ernest, NSDI'16).  Serving is the same shaped problem:
+the per-step decode latency is a smooth function of the batching operating
+point b, and fleet capacity is a function of the replica count m.  This
+module fits two ``ErnestModel`` instances on serve telemetry —
+
+* ``step_model``: decode step seconds vs. active batch b, terms
+  ``theta0 + theta1*b + theta2*log b`` (dispatch floor + per-sequence work +
+  batching sublinearity), fitted by the same NNLS as training f(m);
+* a fleet overhead term ``log m`` models load-balancer fan-out when
+  extrapolating one replica's throughput to m replicas —
+
+and answers the serving versions of the paper's two queries:
+
+* ``plan`` (fastest-to-epsilon analogue): minimum replica count m and
+  max-batch b that sustain a target QPS within a p50 latency SLO;
+* ``best_latency_within_fleet`` (best-within-budget analogue): the lowest
+  achievable p50 given a fixed fleet of m replicas.
+
+Decisions are returned as ``repro.core.hemingway.PlanDecision`` records with
+``algorithm = "continuous@b<batch>"`` so the serve planner composes with the
+training planner's reporting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ernest import ErnestModel
+from repro.core.hemingway import PlanDecision
+
+STEP_TERMS: Tuple[str, ...] = ("const", "m", "log_m")
+
+
+@dataclasses.dataclass
+class ServeObservation:
+    batch: int
+    step_s: float
+
+
+class CapacityPlanner:
+    def __init__(self, fleet_overhead_s_per_log_m: float = 0.0):
+        self.observations: List[ServeObservation] = []
+        self.step_model = ErnestModel(term_names=STEP_TERMS)
+        self.fleet_overhead = fleet_overhead_s_per_log_m
+
+    # ------------------------------------------------------------------
+    def observe(self, batch: int, step_s: float) -> None:
+        self.observations.append(ServeObservation(int(batch), float(step_s)))
+
+    def observe_telemetry(self, telemetry: Sequence[Dict]) -> None:
+        """Ingest ``ServeEngine.telemetry`` rows ({batch, step_s, ...})."""
+        for row in telemetry:
+            if row["batch"] > 0:
+                self.observe(row["batch"], row["step_s"])
+
+    def fit(self) -> "CapacityPlanner":
+        if len({o.batch for o in self.observations}) < 2:
+            raise ValueError("need observations at >= 2 distinct batch sizes")
+        b = np.asarray([o.batch for o in self.observations], np.float64)
+        t = np.asarray([o.step_s for o in self.observations], np.float64)
+        self.step_model.fit(b, np.ones_like(b), t)
+        return self
+
+    # ------------------------------------------------------------------
+    def step_time(self, batch: int) -> float:
+        return float(self.step_model.predict(float(batch), 1.0))
+
+    def tokens_per_s(self, batch: int, m: int = 1) -> float:
+        """Fleet decode throughput at operating point (b, m)."""
+        t = self.step_time(batch) + self.fleet_overhead * np.log(m + 1.0)
+        return m * batch / t
+
+    def p50_latency_s(self, batch: int, gen_tokens: int, m: int = 1) -> float:
+        """Per-request latency to decode ``gen_tokens`` at full batch b."""
+        t = self.step_time(batch) + self.fleet_overhead * np.log(m + 1.0)
+        return gen_tokens * t
+
+    # ------------------------------------------------------------------
+    def plan(
+        self,
+        *,
+        target_p50_s: float,
+        qps: float,
+        gen_tokens: int,
+        batch_grid: Sequence[int],
+        m_grid: Sequence[int],
+    ) -> PlanDecision:
+        """Smallest fleet (m, then b) sustaining ``qps`` requests/s of
+        ``gen_tokens``-token responses with p50 <= ``target_p50_s``."""
+        table: Dict[Tuple[str, int], float] = {}
+        best: Optional[PlanDecision] = None
+        for m in sorted(int(x) for x in m_grid):
+            for b in sorted(int(x) for x in batch_grid):
+                lat = self.p50_latency_s(b, gen_tokens, m)
+                cap_qps = self.tokens_per_s(b, m) / gen_tokens
+                table[(f"continuous@b{b}", m)] = lat
+                feasible = lat <= target_p50_s and cap_qps >= qps
+                if feasible and best is None:
+                    best = PlanDecision(f"continuous@b{b}", m, predicted_time=lat)
+        if best is None:
+            raise ValueError(f"no (m, batch) meets p50<={target_p50_s}s at {qps} qps")
+        best.table = table
+        return best
+
+    def best_latency_within_fleet(
+        self,
+        *,
+        m: int,
+        qps: float,
+        gen_tokens: int,
+        batch_grid: Sequence[int],
+    ) -> PlanDecision:
+        """Best-within-budget analogue: lowest p50 a fixed fleet of ``m``
+        replicas can offer while still sustaining ``qps``."""
+        table: Dict[Tuple[str, int], float] = {}
+        best: Optional[PlanDecision] = None
+        for b in sorted(int(x) for x in batch_grid):
+            lat = self.p50_latency_s(b, gen_tokens, m)
+            cap_qps = self.tokens_per_s(b, m) / gen_tokens
+            table[(f"continuous@b{b}", m)] = lat
+            if cap_qps < qps:
+                continue
+            if best is None or lat < best.predicted_time:
+                best = PlanDecision(f"continuous@b{b}", m, predicted_time=lat)
+        if best is None:
+            raise ValueError(f"fleet of m={m} cannot sustain {qps} qps")
+        best.table = table
+        return best

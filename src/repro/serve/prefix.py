@@ -1,0 +1,148 @@
+"""Prefix cache: hash-chained page sharing for common prompt heads.
+
+Each *full* page of a prompt is keyed by the hash of every token up to and
+including that page (a hash chain, so a key identifies the entire prefix and
+not just the page's own tokens).  Matching walks the chain from page 0 and
+shares physical pages for as long as keys hit — requests with a common
+prompt head then reference the same pages, because causal attention makes a
+position's K/V depend only on the tokens at or before it.
+
+Only full pages are ever shared, and decode writes land at positions at or
+past the prompt length, so shared pages are immutable — no copy-on-write is
+needed.
+
+Whole-prompt entries additionally store the prefill's last-token logits and
+a snapshot of the recurrent (mamba) state, enabling a skip-prefill fast path
+when an identical, page-aligned prompt is admitted again.  Reused logits are
+bit-identical to a cold prefill by construction: they *are* the stored output
+of one.
+
+The cache holds one pool reference per registered page; ``release_lru``
+drops the oldest chains when the pool runs dry, and ``clear`` drops
+everything (after which a drained pool must report zero pages in use — the
+leak invariant ``tests/test_serve.py`` checks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.paging import PagePool
+
+
+def _chain_key(tokens: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(tokens, np.int32).tobytes()).hexdigest()
+
+
+@dataclasses.dataclass
+class FullPromptEntry:
+    page_ids: Tuple[int, ...]
+    last_logits: np.ndarray
+    state: Any  # snapshot_state tree, or None for stateless archs
+
+
+class PrefixCache:
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        # chain-hash -> physical page id, in LRU order (oldest first)
+        self._pages: "OrderedDict[str, int]" = OrderedDict()
+        self._full: "OrderedDict[str, FullPromptEntry]" = OrderedDict()
+        # counters are maintained by the scheduler on *successful* admission
+        # only, so a request blocked on pages and retried every step does not
+        # inflate them
+        self.hits = 0
+        self.pages_shared = 0
+        self.prefills_skipped = 0
+
+    # ------------------------------------------------------------------
+    def match(self, prompt: np.ndarray, pool: PagePool) -> List[int]:
+        """Longest chain of already-cached full pages for ``prompt``.  Takes
+        one reference per matched page on behalf of the caller."""
+        ps = self.page_size
+        matched: List[int] = []
+        for j in range(len(prompt) // ps):
+            key = _chain_key(prompt[: (j + 1) * ps])
+            pid = self._pages.get(key)
+            if pid is None:
+                break
+            self._pages.move_to_end(key)
+            matched.append(pid)
+        if matched:
+            pool.share(matched)
+        return matched
+
+    def register(
+        self, prompt: np.ndarray, page_ids: Sequence[int], pool: PagePool
+    ) -> None:
+        """Publish ``prompt``'s full pages (already written) for future
+        sharing.  The cache takes its own reference on each new page."""
+        ps = self.page_size
+        for j in range(len(prompt) // ps):
+            key = _chain_key(prompt[: (j + 1) * ps])
+            if key in self._pages:
+                self._pages.move_to_end(key)
+                continue
+            pool.share([page_ids[j]])
+            self._pages[key] = page_ids[j]
+
+    # ------------------------------------------------------------------
+    def match_full(
+        self, prompt: np.ndarray, pool: PagePool
+    ) -> Optional[FullPromptEntry]:
+        """Skip-prefill fast path: exact whole-prompt entry (page-aligned
+        prompts only).  Shares the entry's pages on behalf of the caller."""
+        if len(prompt) % self.page_size:
+            return None
+        entry = self._full.get(_chain_key(prompt))
+        if entry is None:
+            return None
+        self._full.move_to_end(_chain_key(prompt))
+        pool.share(entry.page_ids)
+        return entry
+
+    def register_full(
+        self,
+        prompt: np.ndarray,
+        page_ids: Sequence[int],
+        last_logits: np.ndarray,
+        state: Any,
+        pool: PagePool,
+    ) -> None:
+        if len(prompt) % self.page_size:
+            return  # only page-aligned prompts are exactly reusable
+        key = _chain_key(prompt)
+        if key in self._full:
+            return
+        pool.share(page_ids)
+        self._full[key] = FullPromptEntry(
+            tuple(page_ids), np.asarray(last_logits), state
+        )
+
+    # ------------------------------------------------------------------
+    def release_lru(self, pool: PagePool, min_free: int) -> int:
+        """Drop oldest entries until ``pool.free_pages >= min_free`` (or the
+        cache is empty).  Returns the number of references released."""
+        released = 0
+        while pool.free_pages < min_free and (self._pages or self._full):
+            if self._full:
+                _, entry = self._full.popitem(last=False)
+                pool.free(entry.page_ids)
+                released += len(entry.page_ids)
+            else:
+                _, pid = self._pages.popitem(last=False)
+                pool.free([pid])
+                released += 1
+        return released
+
+    def clear(self, pool: PagePool) -> None:
+        for pid in self._pages.values():
+            pool.free([pid])
+        self._pages.clear()
+        for entry in self._full.values():
+            pool.free(entry.page_ids)
+        self._full.clear()

@@ -11,7 +11,7 @@ jamba-398B on a 256-chip pod.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

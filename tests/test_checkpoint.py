@@ -1,11 +1,8 @@
 """Checkpoint manager: roundtrip, atomicity, retention, data-state resume."""
-import json
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.manager import CheckpointManager, _flatten, _unflatten

@@ -4,12 +4,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    Candidate,
     CombinedModel,
     ConvergenceData,
     ConvergenceModel,
     ErnestModel,
-    FeatureLibrary,
     Planner,
     default_candidate_grid,
     greedy_d_optimal,

@@ -2,7 +2,6 @@
 cost_analysis counting loop bodies once)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax import lax
 

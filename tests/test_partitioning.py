@@ -1,6 +1,5 @@
 """Sharding rules: resolution, dedupe, divisibility fallback."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

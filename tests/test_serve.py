@@ -1,0 +1,203 @@
+"""Serve subsystem: allocator/scheduler invariants, paged-decode equivalence,
+prefix-reuse exactness, and the CapacityPlanner fit/query round-trip."""
+import numpy as np
+import pytest
+
+from repro.serve import CapacityPlanner, OutOfPages, PagePool, ServeEngine
+from repro.serve.paging import SCRATCH_PAGE
+
+ARCH = "qwen3-14b"  # dense: slot-independent decode (see engine docstring)
+GEOM = dict(smoke=True, max_batch=2, page_size=8, max_seq=64, seed=0)
+
+
+def _prompt(rng, n):
+    return rng.randint(0, 256, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------- allocator
+def test_page_pool_alloc_share_free():
+    pool = PagePool(num_pages=6, page_size=8)
+    assert pool.pages_in_use == 0 and pool.free_pages == 5
+    pages = pool.alloc(3)
+    assert SCRATCH_PAGE not in pages
+    assert pool.pages_in_use == 3
+    pool.share(pages[:1])
+    pool.free(pages)  # shared page survives with one ref
+    assert pool.pages_in_use == 1
+    pool.free(pages[:1])
+    assert pool.pages_in_use == 0 and pool.free_pages == 5
+    with pytest.raises(OutOfPages):
+        pool.alloc(6)
+    with pytest.raises(ValueError):
+        pool.free(pages[:1])  # double free
+
+
+# ---------------------------------------------------------------- scheduler
+def test_no_page_leak_after_evict():
+    eng = ServeEngine(ARCH, **GEOM)
+    rng = np.random.RandomState(0)
+    for i in range(5):  # more requests than slots -> queueing + eviction
+        eng.submit(_prompt(rng, 9 + 3 * i), max_new_tokens=3,
+                   arrival_step=i % 2)
+    eng.run()
+    assert eng.scheduler.drained
+    # prefix cache still pins published pages; clearing it must leave zero
+    eng.prefix.clear(eng.pool)
+    assert eng.pool.pages_in_use == 0
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+    # idle slots all point at the scratch page with zero length
+    assert (eng.page_tables == SCRATCH_PAGE).all()
+    assert (eng.lengths == 0).all()
+
+
+def test_join_on_arrival_preserves_decoded_tokens():
+    rng = np.random.RandomState(1)
+    prompt = _prompt(rng, 16)
+    guest = _prompt(rng, 9)
+
+    solo = ServeEngine(ARCH, **GEOM)
+    r_solo = solo.submit(prompt, max_new_tokens=8)
+    solo.run()
+
+    busy = ServeEngine(ARCH, **GEOM)
+    r_host = busy.submit(prompt, max_new_tokens=8)
+    r_guest = busy.submit(guest, max_new_tokens=4, arrival_step=3)
+    busy.run()
+
+    assert r_guest.admitted_step >= 3, "guest must join mid-decode"
+    assert r_host.generated == r_solo.generated
+    assert len(r_guest.generated) == 4
+
+
+def test_evict_on_finish_frees_slot_for_queued_request():
+    eng = ServeEngine(ARCH, **GEOM)
+    rng = np.random.RandomState(2)
+    first = [eng.submit(_prompt(rng, 10), max_new_tokens=2) for _ in range(2)]
+    third = eng.submit(_prompt(rng, 10), max_new_tokens=2)  # no free slot
+    eng.run()
+    assert all(r.finished_step >= 0 for r in first + [third])
+    assert third.admitted_step > first[0].admitted_step
+
+
+# ------------------------------------------------------------- prefix reuse
+def test_prefix_reuse_bit_identical_logits():
+    rng = np.random.RandomState(3)
+    head = _prompt(rng, 16)  # two full pages of 8
+    pA = np.concatenate([head, _prompt(rng, 5)])
+    pB = np.concatenate([head, _prompt(rng, 7)])
+
+    cold = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    rB_cold = cold.submit(pB, max_new_tokens=5)
+    cold.run()
+
+    warm = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    warm.submit(pA, max_new_tokens=5)
+    warm.run()
+    rB = warm.submit(pB, max_new_tokens=5)
+    warm.run()
+
+    assert rB.n_shared_pages == 2, "prompt head pages must be shared"
+    assert rB.generated == rB_cold.generated
+    assert len(rB.logits_trace) == len(rB_cold.logits_trace) == 5
+    for got, want in zip(rB.logits_trace, rB_cold.logits_trace):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_prefix_share_join_does_not_perturb_running_donor():
+    """A prefix-sharing request joining mid-decode must neither disturb the
+    donor's remaining tokens nor lose its own cold-prefill exactness: shared
+    pages are never rewritten, and their content is bitwise what the
+    joiner's own prefill computed (engine pins the flash block size)."""
+    rng = np.random.RandomState(8)
+    head = _prompt(rng, 16)
+    pA = np.concatenate([head, _prompt(rng, 6)])
+    pB = np.concatenate([head, _prompt(rng, 11)])
+
+    solo = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    rA_solo = solo.submit(pA, max_new_tokens=10)
+    solo.run()
+    cold = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    rB_cold = cold.submit(pB, max_new_tokens=4)
+    cold.run()
+
+    eng = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    rA = eng.submit(pA, max_new_tokens=10)
+    rB = eng.submit(pB, max_new_tokens=4, arrival_step=3)  # A still decoding
+    eng.run()
+
+    assert rB.n_shared_pages == 2 and rB.admitted_step >= 3
+    assert rA.generated == rA_solo.generated, "donor perturbed by joiner"
+    assert rB.generated == rB_cold.generated
+    for got, want in zip(rB.logits_trace, rB_cold.logits_trace):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_full_prompt_reuse_skips_prefill():
+    rng = np.random.RandomState(4)
+    prompt = _prompt(rng, 16)  # page-aligned
+    eng = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    r1 = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    r2 = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    assert not r1.prefill_skipped and r2.prefill_skipped
+    assert r1.generated == r2.generated
+    for got, want in zip(r2.logits_trace, r1.logits_trace):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_full_prompt_reuse_with_mamba_state():
+    rng = np.random.RandomState(5)
+    prompt = _prompt(rng, 16)
+    eng = ServeEngine("falcon-mamba-7b", collect_logits=True, **GEOM)
+    r1 = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    r2 = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    assert r2.prefill_skipped
+    assert r1.generated == r2.generated
+    for got, want in zip(r2.logits_trace, r1.logits_trace):
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------- capacity planner
+def test_capacity_planner_fit_query_roundtrip():
+    # synthetic telemetry from a known affine step model t(b) = a + c*b
+    a, c = 0.02, 0.005
+    planner = CapacityPlanner()
+    for b in [1, 2, 4, 8] * 4:
+        planner.observe(b, a + c * b)
+    planner.fit()
+    for b in (1, 4, 16):
+        assert planner.step_time(b) == pytest.approx(a + c * b, rel=0.05)
+
+    # min-fleet query: 10-token responses, p50 target admits b <= 8.
+    # capacity per replica at b=8 is 8/0.06 = 133 tok/s = 13.3 qps, so
+    # 45 qps needs m=4 (b=4 offers only 40 qps at m=4).
+    plan = planner.plan(target_p50_s=0.61, qps=45.0,
+                        gen_tokens=10, batch_grid=[1, 2, 4, 8],
+                        m_grid=[1, 2, 4, 8, 16, 32])
+    assert plan.m == 4 and plan.algorithm == "continuous@b8"
+    assert plan.predicted_time == pytest.approx(10 * (a + c * 8), rel=0.05)
+
+    # budget query: fixed fleet, lowest feasible latency (b=1 suffices)
+    best = planner.best_latency_within_fleet(
+        m=4, qps=10.0, gen_tokens=10, batch_grid=[1, 2, 4, 8])
+    assert best.predicted_time == pytest.approx(10 * (a + c * 1), rel=0.05)
+
+    with pytest.raises(ValueError):
+        planner.plan(target_p50_s=1e-6, qps=40.0, gen_tokens=10,
+                     batch_grid=[1, 2], m_grid=[1])
+
+
+def test_capacity_planner_from_engine_telemetry():
+    eng = ServeEngine(ARCH, **GEOM)
+    rng = np.random.RandomState(7)
+    eng.submit(_prompt(rng, 10), max_new_tokens=6)
+    eng.submit(_prompt(rng, 13), max_new_tokens=4, arrival_step=1)
+    eng.run()
+    planner = CapacityPlanner()
+    planner.observe_telemetry(eng.telemetry)
+    planner.fit()  # distinct batch sizes 1 and 2 observed
+    assert planner.step_time(1) > 0
+    assert planner.tokens_per_s(2, m=2) > planner.tokens_per_s(2, m=1) * 1.5
