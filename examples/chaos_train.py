@@ -1,0 +1,75 @@
+"""Closed-loop elastic training on the deterministic chaos simulator (§6).
+
+Generates a seeded fault trace (stragglers, preemptions, slowdowns,
+membership churn), then drives the full adaptive loop against it:
+
+    trace -> ClusterSim -> StragglerMonitor / FailureInjector
+          -> AdaptiveController (online ConvergenceModel + Ernest refits)
+          -> elastic resize / sync_relax / rebalance / hot_spare
+
+and finally REPLAYS the emitted run log from the same seed, asserting the
+(m, objective, decision) sequence is bit-identical — the guarantee the
+golden-trace regression tests in tests/test_chaos.py are built on.
+
+  PYTHONPATH=src python examples/chaos_train.py --seed 0
+  PYTHONPATH=src python examples/chaos_train.py --seed 0 --out run.json
+  PYTHONPATH=src python examples/chaos_train.py --seed 0 --lm   # real LM
+"""
+import os
+
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+
+
+def summarize(log) -> None:
+    print(f"steps={len(log.rows)} mitigations={log.n_mitigations()} "
+          f"resizes={log.n_resizes()} final_m={log.meta['final_m']} "
+          f"final_objective={log.meta['final_objective']:.4f} "
+          f"modeled_wall={log.final_wall_clock():.1f}s")
+    for r in log.rows:
+        tag = r.get("mitigation") or r.get("decision") or r.get("restore")
+        if tag:
+            print(f"  step {r['step']:4d} m={r['m']} {tag} "
+                  f"objective={r['objective']:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=160)
+    ap.add_argument("--out", default=None, help="write run log JSON here")
+    ap.add_argument("--lm", action="store_true",
+                    help="drive the real (smoke) LM trainer instead of the "
+                         "convex BSP simulator")
+    ap.add_argument("--no-replay", action="store_true",
+                    help="skip the replay determinism check")
+    args = ap.parse_args()
+
+    from repro.runtime.chaos import ChaosTrace, replay, run_chaos_sim
+
+    if args.lm:
+        import tempfile
+
+        from repro.launch.train import run_chaos_lm
+        trace = ChaosTrace.generate(args.seed, args.steps, n_hosts=4)
+        with tempfile.TemporaryDirectory() as td:
+            log = run_chaos_lm("stablelm-1.6b", trace, td, seed=args.seed)
+        summarize(log)
+    else:
+        log = run_chaos_sim(args.seed, steps=args.steps)
+        summarize(log)
+        if not args.no_replay:
+            log2 = replay(log)
+            assert log.signature() == log2.signature(), \
+                "replay diverged from the original run"
+            print("replay: identical (m, objective, decision) sequence ✓")
+    if args.out:
+        log.save(args.out)
+        print(f"run log -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,11 @@ class AdaptiveController:
         self.decisions: List[ResizeDecision] = []
 
     # ------------------------------------------------------------------
+    def set_m_options(self, m_options: Sequence[int]) -> None:
+        """Replace the candidate cluster sizes (elastic capacity changed)."""
+        self.m_options = sorted(set(int(m) for m in m_options))
+
+    # ------------------------------------------------------------------
     def observe(self, iteration: int, m: int, value: float) -> Optional[ResizeDecision]:
         self.observations.append(Observation(iteration, m, value))
         self._since_refit += 1
@@ -98,8 +103,15 @@ class AdaptiveController:
         f_m = float(self.system.predict(m, self.data_size))
         # find iterations needed (on m machines) for predicted gap <= target
         lo, hi = now_iter + 1, now_iter + 200_000
-        pred_gap = lambda i: float(
-            self.model.predict(np.asarray([i], np.float64), m)[0] - self.p_star)
+
+        def pred_gap(i: int) -> float:
+            # a non-monotone or degenerate fit can predict exploding gaps;
+            # treat any non-finite prediction as "never reaches the target"
+            with np.errstate(over="ignore", invalid="ignore"):
+                g = float(self.model.predict(
+                    np.asarray([i], np.float64), m)[0] - self.p_star)
+            return g if np.isfinite(g) else np.inf
+
         if pred_gap(hi) > self.target_gap:
             return None
         while hi - lo > 1:

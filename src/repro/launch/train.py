@@ -182,6 +182,112 @@ class Trainer:
         return last
 
 
+# ---------------------------------------------------------------------------
+# Chaos mode: the closed elastic loop over the REAL trainer
+# ---------------------------------------------------------------------------
+class TrainerExecutor:
+    """Chaos-loop executor backed by the real LM Trainer.
+
+    Implements the ``repro.runtime.chaos.ChaosLoop`` executor contract with
+    the production mechanisms: ``checkpoint``/``restore`` go through the
+    CheckpointManager, and ``resize`` rebuilds the trainer at the new
+    data-parallel degree and re-places params + optimizer state onto the
+    mesh via the elastic re-shard path (repro.runtime.elastic.rescale) from
+    the latest checkpoint — the same move a multi-host deployment makes,
+    executed here on the debug mesh."""
+
+    def __init__(self, arch: str, m0: int, *, ckpt_dir: str,
+                 batch_per_worker: int = 2, seq_len: int = 32,
+                 total_steps: int = 200, seed: int = 0):
+        from repro.launch.mesh import make_debug_mesh
+        self.arch = arch
+        self.batch_per_worker = batch_per_worker
+        self.seq_len = seq_len
+        self.total_steps = total_steps
+        self.seed = seed
+        self.ckpt_dir = ckpt_dir
+        self.mesh = make_debug_mesh(1, 1)
+        self.rules = Rules.default(self.mesh)
+        self.m0 = m0      # the base TrainConfig lr corresponds to m0's batch
+        self.m = 0
+        self._build(m0)
+
+    # ------------------------------------------------------------------
+    def _opts(self, m: int) -> TrainerOptions:
+        return TrainerOptions(
+            arch=self.arch, smoke=True, steps=self.total_steps,
+            seq_len=self.seq_len, global_batch=m * self.batch_per_worker,
+            ckpt_dir=self.ckpt_dir, ckpt_every=10 ** 9,  # loop checkpoints
+            seed=self.seed, log_every=0, mesh=self.mesh, rules=self.rules)
+
+    def _build(self, m: int) -> None:
+        from repro.training.trainer import rescaled_config
+        # every rebuild starts from the BASE config, so the linear-scaling
+        # ratio is always m/m0 — per-resize ratios would compound wrongly
+        ratio = m / self.m0
+        self.trainer = Trainer(self._opts(m))
+        if ratio != 1.0:
+            self.trainer.tcfg = rescaled_config(self.trainer.tcfg, ratio)
+            self.trainer._step_fn = self.trainer._make_step()
+        self.m = m
+
+    def _place_from_checkpoint(self) -> None:
+        """Host arrays -> sharded arrays on the current mesh (elastic path)."""
+        from repro.runtime.elastic import rescale_training_state
+        t = self.trainer
+        tree, meta = t.ckpt.restore(t.ckpt.latest_step())
+        placed = rescale_training_state(tree, self.mesh, self.rules,
+                                        t.param_axes, t.opt)
+        t.params, t.opt_state = placed["params"], placed["opt_state"]
+        t.data.load_state_dict(meta["data_state"])
+        t.step = int(meta["step"])
+
+    # -- executor contract ---------------------------------------------
+    def outer_step(self, sync_mask=None) -> float:
+        metrics = self.trainer.train_some(1)
+        return float(metrics["loss"])
+
+    def checkpoint(self) -> None:
+        self.trainer._save(block=True)
+        self.trainer.ckpt.wait()
+
+    def restore(self) -> None:
+        self._place_from_checkpoint()
+
+    def resize(self, m: int) -> None:
+        self._build(m)
+        self._place_from_checkpoint()
+
+    def relax(self, local_steps: int) -> None:
+        from repro.training.trainer import rescaled_config
+        self.trainer.tcfg = rescaled_config(self.trainer.tcfg, 1.0,
+                                            local_steps=local_steps)
+        self.trainer._step_fn = self.trainer._make_step()
+
+
+def run_chaos_lm(arch: str, trace, ckpt_dir: str, *, m0: int = 1,
+                 m_options=(1, 2, 4), seed: int = 0):
+    """Closed-loop elastic training of a real (smoke) LM under a chaos
+    trace: simulated step times + failures, real losses, real checkpoint
+    restores, real mesh re-shards."""
+    from repro.core.adaptive import AdaptiveController
+    from repro.runtime.chaos import ChaosLoop, ClusterSim, default_system_model
+
+    executor = TrainerExecutor(arch, m0, ckpt_dir=ckpt_dir,
+                               total_steps=trace.steps, seed=seed)
+    system = default_system_model()
+    # objective = train loss; loss > 0 so p_star=0 is a valid gap floor
+    controller = AdaptiveController(
+        system, target_gap=1.0, p_star=0.0, m_options=m_options,
+        refit_every=15, window=80, reshard_cost_s=2.0, min_observations=20)
+    loop = ChaosLoop(ClusterSim(trace), executor, controller,
+                     base_compute_s=1.0, d=64, ckpt_every=10,
+                     restore_cost_s=3.0)
+    log = loop.run()
+    log.meta.update(seed=seed, arch=arch, mode="lm")
+    return log
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -192,7 +298,38 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--compression", default=None)
+    ap.add_argument("--chaos", default=None, metavar="TRACE.json",
+                    help="run the closed-loop elastic trainer under this "
+                         "chaos trace (generated with --chaos-seed if the "
+                         "file does not exist)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-out", default=None,
+                    help="write the replayable run log JSON here")
     args = ap.parse_args()
+    if args.chaos is not None:
+        import tempfile
+        from pathlib import Path
+
+        from repro.runtime.chaos import ChaosTrace
+        path = Path(args.chaos)
+        if path.exists():
+            trace = ChaosTrace.load(path)
+        else:
+            trace = ChaosTrace.generate(args.chaos_seed, args.steps,
+                                        n_hosts=4)
+            trace.save(path)
+            print(f"[chaos] generated trace -> {path}")
+        ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="chaos_ckpt_")
+        log = run_chaos_lm(args.arch, trace, ckpt_dir,
+                           seed=args.chaos_seed)
+        if args.chaos_out:
+            log.save(args.chaos_out)
+            print(f"[chaos] run log -> {args.chaos_out}")
+        print(f"[chaos] steps={len(log.rows)} mitigations="
+              f"{log.n_mitigations()} resizes={log.n_resizes()} "
+              f"final_m={log.meta['final_m']} "
+              f"final_loss={log.meta['final_objective']:.4f}")
+        return
     opts = TrainerOptions(arch=args.arch, smoke=args.smoke, steps=args.steps,
                           seq_len=args.seq_len, global_batch=args.global_batch,
                           ckpt_dir=args.ckpt_dir, optimizer=args.optimizer,

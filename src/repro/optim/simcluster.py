@@ -17,12 +17,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ernest import ErnestModel
-from repro.optim.cocoa import CocoaConfig, RunRecord, run_cocoa
+from repro.optim.cocoa import CocoaConfig, RunRecord, partition, run_cocoa
 from repro.optim.lbfgs import LBFGSConfig, run_lbfgs
 from repro.optim.problems import ERMProblem
 from repro.optim.sgd import (
@@ -35,6 +38,134 @@ from repro.optim.sgd import (
 )
 
 ALGORITHMS = ("cocoa", "cocoa+", "minibatch_sgd", "local_sgd", "gd", "lbfgs")
+
+
+# ---------------------------------------------------------------------------
+# SSP / staleness-aware local-SGD: the stepwise executor the chaos loop
+# drives (repro.runtime.chaos).  Unlike the run_* trajectory functions above
+# it advances ONE outer iteration at a time, so the control loop can change
+# m (elastic resize), H (sync_relax mitigation), and the per-worker sync
+# mask (SSP: a straggler skips the barrier, bounded-staleness) mid-run —
+# each with a real algorithmic effect on the objective trajectory.
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnums=(0, 4))
+def _ssp_outer_step(static, Xs, ys, W, h, mask, lam, t, key):
+    """One SSP round: every worker runs h local SGD steps from its own
+    (possibly stale) copy; workers with mask=1 push/pull at the barrier."""
+    loss, gamma_sm, lr0, t0 = static
+    m, nl, _ = Xs.shape
+    keys = jax.random.split(key, m)
+
+    def worker(Xk, yk, wk, k):
+        idx = jax.random.randint(k, (h,), 0, nl)
+
+        def step(carry, j):
+            w_c, i_c = carry
+            x, yj = Xk[j], yk[j]
+            z = yj * jnp.dot(x, w_c)
+            if loss == "hinge":
+                gz = jnp.where(z < 1.0, -1.0, 0.0)
+            elif loss == "smooth_hinge":
+                gz = jnp.where(z >= 1.0, 0.0,
+                               jnp.where(z <= 1.0 - gamma_sm, -1.0,
+                                         (z - 1.0) / gamma_sm))
+            else:
+                gz = -jax.nn.sigmoid(-z)
+            g = gz * yj * x + lam * w_c
+            lr = lr0 / (lam * (t * h + i_c + t0))
+            return (w_c - lr * g, i_c + 1.0), None
+
+        (wk2, _), _ = jax.lax.scan(step, (wk, jnp.float32(0.0)), idx)
+        return wk2
+
+    W2 = jax.vmap(worker)(Xs, ys, W, keys)           # (m, d) local results
+    n_sync = jnp.maximum(jnp.sum(mask), 1.0)
+    w_new = jnp.sum(W2 * mask[:, None], axis=0) / n_sync
+    # syncing workers pull the fresh average; stale workers keep diverging
+    W_next = jnp.where(mask[:, None] > 0, w_new[None, :], W2)
+    return W_next, w_new
+
+
+class SSPLocalSGD:
+    """Stepwise staleness-aware local-SGD over m vmapped BSP workers.
+
+    Implements the chaos-loop executor contract: ``outer_step`` advances one
+    outer iteration (returns the primal objective at the synced iterate),
+    ``resize`` re-shards the data to a new m from the current iterate (what
+    the elastic path does from a checkpoint), ``relax`` switches to H>1
+    local steps (sync_relax mitigation), and ``checkpoint``/``restore``
+    snapshot/rewind the global iterate — a restore genuinely loses the work
+    since the last checkpoint, exactly like a real restart.
+
+    Determinism: minibatch draws come from ``fold_in(seed, outer_t)`` so a
+    replayed run (same seed, same control actions) is bit-identical.
+    """
+
+    def __init__(self, problem: ERMProblem, m: int, *, local_steps: int = 1,
+                 lr0: float = 1.0, t0: float = 100.0, seed: int = 0):
+        self.problem = problem
+        self.local_steps = int(local_steps)
+        self.lr0 = float(lr0)
+        self.t0 = float(t0)
+        self.seed = int(seed)
+        self.w = jnp.zeros((problem.d,), jnp.float32)
+        self.t = 0                      # outer-iteration counter (lr + PRNG)
+        self._key = jax.random.PRNGKey(seed)
+        self._ckpt = None
+        self._primal = jax.jit(problem.primal)
+        self.m = 0
+        self.resize(m)
+
+    # -- executor contract ---------------------------------------------
+    def resize(self, m: int) -> None:
+        """Re-partition the data over m workers, seeding every worker from
+        the current global iterate (the elastic re-shard, simulated)."""
+        self.m = int(m)
+        self.Xs, self.ys = partition(self.problem.X, self.problem.y, self.m)
+        self.W = jnp.broadcast_to(self.w, (self.m, self.problem.d))
+
+    def relax(self, local_steps: int) -> None:
+        self.local_steps = max(int(local_steps), 1)
+
+    def checkpoint(self) -> None:
+        self._ckpt = (np.asarray(self.w), self.t, self.local_steps)
+
+    def restore(self) -> None:
+        assert self._ckpt is not None, "no checkpoint to restore"
+        w, t, h = self._ckpt
+        self.w = jnp.asarray(w)
+        self.t = t
+        self.local_steps = h
+        self.W = jnp.broadcast_to(self.w, (self.m, self.problem.d))
+
+    def outer_step(self, sync_mask: Optional[Sequence[bool]] = None) -> float:
+        if sync_mask is None:
+            mask = np.ones(self.m, np.float32)
+        else:
+            mask = np.asarray([1.0 if s else 0.0 for s in sync_mask],
+                              np.float32)
+            if mask.shape[0] < self.m:       # capacity shrank under us
+                mask = np.concatenate(
+                    [mask, np.ones(self.m - mask.shape[0], np.float32)])
+            mask = mask[:self.m]
+        if not mask.any():
+            mask[0] = 1.0                    # someone must hold the iterate
+        static = (self.problem.loss, self.problem.smooth_gamma,
+                  self.lr0, self.t0)
+        key = jax.random.fold_in(self._key, self.t)
+        self.W, self.w = _ssp_outer_step(
+            static, self.Xs, self.ys, self.W, self.local_steps,
+            jnp.asarray(mask), self.problem.lam, jnp.float32(self.t), key)
+        self.t += 1
+        return float(self._primal(self.w))
+
+    # ------------------------------------------------------------------
+    def reference_floor(self, iters: int = 300) -> float:
+        """Deterministic lower-bound estimate of P* for gap computation:
+        full-gradient descent run long, minus a small margin."""
+        rec = run_gd(self.problem, GDConfig(outer_iters=iters),
+                     record_every=50)
+        return float(rec.primal.min()) - 1e-3
 
 
 @dataclasses.dataclass(frozen=True)

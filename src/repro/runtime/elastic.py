@@ -43,3 +43,16 @@ def rescale(host_state: Dict[str, Any], new_mesh, rules: Rules,
         sh = shardings_for(new_mesh, rules, axes[key], host_state[key])
         out[key] = reshard_tree(host_state[key], sh)
     return out
+
+
+def rescale_training_state(host_state: Dict[str, Any], new_mesh,
+                           rules: Rules, param_axes, opt) -> Dict[str, Any]:
+    """The full elastic move for a checkpointed training state: derive the
+    optimizer-state axes from the parameter axes (Optimizer.init_axes) and
+    re-place both trees on the new mesh.  This is the single entry point
+    the resize paths (chaos loop, elastic examples) go through, so the
+    params/opt-state axis pairing is written down exactly once."""
+    axes = {"params": param_axes, "opt_state": opt.init_axes(param_axes)}
+    return rescale({"params": host_state["params"],
+                    "opt_state": host_state["opt_state"]},
+                   new_mesh, rules, axes)

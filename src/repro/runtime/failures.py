@@ -30,6 +30,12 @@ class FailureInjector:
     def at(cls, *steps: int) -> "FailureInjector":
         return cls(fail_at_steps=set(steps))
 
+    def schedule(self, step: int) -> None:
+        """Arm a failure at ``step`` mid-run — the chaos loop translates
+        trace preemption events into injector schedules so recovery runs
+        through the same catch/restore path a real heartbeat loss would."""
+        self.fail_at_steps.add(step)
+
     def check(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self.fired:
             self.fired.add(step)

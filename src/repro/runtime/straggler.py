@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -29,23 +29,49 @@ class StragglerEvent:
     step_time: float
     expected: float
     action: str
+    host: int = -1   # slowest host when per-host times were supplied and
+    #                  one host stands out; -1 = cluster-wide (no target)
 
 
 class StragglerMonitor:
     def __init__(self, threshold_sigmas: float = 3.0, min_ratio: float = 1.5,
                  consecutive: int = 3, ewma: float = 0.05,
-                 expected_time: Optional[float] = None):
+                 expected_time: Optional[float] = None,
+                 host_ratio: float = 1.3):
         self.threshold_sigmas = threshold_sigmas
         self.min_ratio = min_ratio
         self.consecutive = consecutive
         self.ewma = ewma
         self.expected_time = expected_time  # Ernest prediction, if available
+        self.host_ratio = host_ratio  # outlier-host attribution threshold
         self.mean: Optional[float] = None
         self.var: float = 0.0
         self._flags = 0
         self.events: List[StragglerEvent] = []
 
-    def observe(self, step: int, step_time: float) -> Optional[StragglerEvent]:
+    def reset(self, expected_time: Optional[float] = None) -> None:
+        """Re-anchor after a legitimate step-time level shift (resize): new
+        EWMA baseline, optionally a fresh Ernest expectation for the new m."""
+        self.mean = None
+        self.var = 0.0
+        self._flags = 0
+        self.expected_time = expected_time
+
+    def _attribute(self, host_times: Optional[Dict[int, float]]) -> int:
+        """Name the straggling host — only when one host is genuinely the
+        outlier (a cluster-wide slowdown has no target to mitigate)."""
+        if not host_times or len(host_times) < 2:
+            return -1
+        ordered = sorted(host_times.items(), key=lambda kv: kv[1])
+        worst_host, worst = ordered[-1]
+        runner_up = ordered[-2][1]
+        if worst > self.host_ratio * max(runner_up, 1e-12):
+            return worst_host
+        return -1
+
+    def observe(self, step: int, step_time: float,
+                host_times: Optional[Dict[int, float]] = None
+                ) -> Optional[StragglerEvent]:
         if self.mean is None:
             self.mean = step_time
             return None
@@ -67,6 +93,7 @@ class StragglerMonitor:
         ratio = step_time / baseline
         action = ("hot_spare" if ratio > 4.0
                   else "rebalance" if ratio > 2.0 else "sync_relax")
-        ev = StragglerEvent(step, step_time, baseline, action)
+        ev = StragglerEvent(step, step_time, baseline, action,
+                            host=self._attribute(host_times))
         self.events.append(ev)
         return ev

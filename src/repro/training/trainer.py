@@ -36,6 +36,19 @@ class TrainConfig:
     compression: Optional[str] = None  # None | "int8" | "topk" | "powersgd"
 
 
+def rescaled_config(cfg: TrainConfig, batch_ratio: float,
+                    local_steps: Optional[int] = None) -> TrainConfig:
+    """Adjust a TrainConfig after an elastic resize: linear lr-scaling with
+    the global-batch ratio (Goyal et al.), optionally switching the
+    local-SGD sync period (the sync_relax mitigation).  Used by the chaos
+    closed loop when a ResizeDecision changes the data-parallel degree."""
+    return dataclasses.replace(
+        cfg,
+        learning_rate=cfg.learning_rate * batch_ratio,
+        local_steps=cfg.local_steps if local_steps is None else
+        max(int(local_steps), 1))
+
+
 def lr_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
     s = step.astype(jnp.float32)
     warm = s / jnp.maximum(cfg.warmup_steps, 1)

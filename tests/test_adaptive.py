@@ -1,0 +1,161 @@
+"""Edge cases for the adaptive layer: AdaptiveController (empty/degenerate
+telemetry, non-monotone fits, resize hysteresis) and the serve
+CapacityPlanner (empty/single-point telemetry, non-monotone step models)."""
+import numpy as np
+import pytest
+
+from repro.core import AdaptiveController, ErnestModel
+from repro.serve import CapacityPlanner
+
+
+def _system(times, ms=(1, 2, 4, 8)):
+    ms = np.asarray(ms, np.float64)
+    return ErnestModel().fit(ms, np.ones_like(ms), np.asarray(times))
+
+
+def _controller(times, **kw):
+    defaults = dict(target_gap=0.05, p_star=0.0, m_options=[1, 2, 4],
+                    refit_every=5, min_observations=10, reshard_cost_s=0.5)
+    defaults.update(kw)
+    return AdaptiveController(_system(times), **defaults)
+
+
+def _feed_decay(ctrl, n, m=2, gap0=2.0, rate=0.01, start=0):
+    """Clean exponential-decay observations; returns the last decision."""
+    d = None
+    for i in range(start, start + n):
+        d = ctrl.observe(i, m, ctrl.p_star + gap0 * np.exp(-rate * i)) or d
+    return d
+
+
+# ----------------------------------------------------------- controller
+def test_controller_silent_below_min_observations():
+    ctrl = _controller([1.0, 0.55, 0.3, 0.2], min_observations=30)
+    for i in range(29):
+        assert ctrl.observe(i, 2, 2.0 * np.exp(-0.01 * i)) is None
+    assert ctrl.model is None   # no refit yet either
+
+
+def test_controller_single_then_degenerate_telemetry():
+    """Constant objective (zero-variance log-gap) must not crash the refit
+    or force a resize — 'stay' (or no decision) is the only sane answer."""
+    ctrl = _controller([1.0, 0.55, 0.3, 0.2], min_observations=5,
+                       refit_every=5)
+    d = None
+    for i in range(40):
+        d = ctrl.observe(i, 2, 1.0) or d   # flat: no signal to act on
+    assert d is None or not d.resize
+
+
+def test_controller_non_monotone_objective_no_crash():
+    """An objective that oscillates and trends UP gives a non-monotone
+    (even exploding) fit; predictions must stay finite and the controller
+    must not recommend a resize on garbage."""
+    ctrl = _controller([1.0, 0.55, 0.3, 0.2], min_observations=10,
+                       refit_every=5)
+    rng = np.random.RandomState(0)
+    d = None
+    for i in range(60):
+        value = 1.0 + 0.01 * i + 0.5 * rng.rand()   # diverging + noisy
+        d = ctrl.observe(i, 2, value) or d
+    if d is not None:
+        for t in (d.predicted_remaining_current, d.predicted_remaining_target):
+            assert t is None or np.isfinite(t)
+
+
+def test_controller_resizes_on_clear_advantage():
+    """Sanity anchor for the hysteresis test: with f(4) ~4x faster the
+    controller must leave m=2."""
+    ctrl = _controller([1.0, 0.52, 0.26, 0.13])
+    d = _feed_decay(ctrl, 60, m=2)
+    assert d is not None and d.resize and d.target_m == 4
+
+
+def test_controller_hysteresis_no_flapping_within_noise():
+    """When every m predicts remaining time within the hysteresis band
+    (~10%), the controller must keep the current m — a prediction inside
+    the noise floor is not worth a reshard."""
+    # nearly-flat f(m): 5% spread across options
+    ctrl = _controller([1.02, 1.0, 0.97, 0.96])
+    decisions = []
+    d = None
+    for i in range(120):
+        d = ctrl.observe(i, 2, 2.0 * np.exp(-0.01 * i))
+        if d is not None:
+            decisions.append(d)
+    assert decisions, "controller must keep deciding"
+    assert all(not d.resize for d in decisions), \
+        [f"{d.target_m}:{d.reason}" for d in decisions if d.resize]
+
+
+def test_controller_no_flapping_after_a_resize():
+    """After moving to the best m the controller must not bounce back:
+    once at m=4 every subsequent decision stays at 4."""
+    ctrl = _controller([1.0, 0.52, 0.26, 0.13])
+    m = 2
+    resizes = []
+    for i in range(150):
+        d = ctrl.observe(i, m, 2.0 * np.exp(-0.01 * i))
+        if d is not None and d.resize:
+            resizes.append((i, m, d.target_m))
+            m = d.target_m
+    assert [r[2] for r in resizes] == [4], resizes
+
+
+def test_controller_set_m_options():
+    ctrl = _controller([1.0, 0.52, 0.26, 0.13])
+    ctrl.set_m_options([1, 2])   # capacity shrank: 4 is gone
+    d = _feed_decay(ctrl, 60, m=2)
+    assert 4 not in ctrl.m_options
+    if d is not None and d.resize:
+        assert d.target_m in (1, 2)
+
+
+# ------------------------------------------------------ capacity planner
+def test_planner_empty_and_single_point_telemetry():
+    planner = CapacityPlanner()
+    with pytest.raises(ValueError):
+        planner.fit()                      # empty
+    planner.observe(4, 0.05)
+    planner.observe(4, 0.06)               # same batch twice: still 1 point
+    with pytest.raises(ValueError):
+        planner.fit()
+    planner.observe(8, 0.08)               # second distinct batch
+    planner.fit()
+    assert planner.step_time(6) > 0
+
+
+def test_planner_non_monotone_telemetry_stays_sane():
+    """Step times DECREASING with batch contradict the model family; the
+    NNLS fit must still produce positive, finite predictions and the plan
+    queries must either answer or raise ValueError (never nonsense)."""
+    planner = CapacityPlanner()
+    for b, t in [(1, 0.09), (2, 0.07), (4, 0.05), (8, 0.04)] * 3:
+        planner.observe(b, t)
+    planner.fit()
+    for b in (1, 2, 4, 8, 16):
+        t = planner.step_time(b)
+        assert np.isfinite(t) and t > 0
+    try:
+        plan = planner.plan(target_p50_s=10.0, qps=1.0, gen_tokens=10,
+                            batch_grid=[1, 2, 4, 8], m_grid=[1, 2, 4])
+        assert plan.m >= 1 and np.isfinite(plan.predicted_time)
+    except ValueError:
+        pass   # an honest refusal is acceptable; garbage is not
+
+
+def test_planner_noisy_but_monotone_telemetry():
+    """Realistic noisy telemetry: fit recovers the trend and both queries
+    answer consistently (more replicas never hurts capacity)."""
+    rng = np.random.RandomState(3)
+    planner = CapacityPlanner()
+    for b in [1, 2, 4, 8] * 8:
+        planner.observe(b, 0.02 + 0.005 * b + 0.002 * rng.rand())
+    planner.fit()
+    caps = [planner.tokens_per_s(8, m=m) for m in (1, 2, 4)]
+    assert caps[0] < caps[1] < caps[2]
+    plan = planner.plan(target_p50_s=1.0, qps=20.0, gen_tokens=10,
+                        batch_grid=[1, 2, 4, 8], m_grid=[1, 2, 4, 8])
+    best = planner.best_latency_within_fleet(
+        m=plan.m, qps=20.0, gen_tokens=10, batch_grid=[1, 2, 4, 8])
+    assert best.predicted_time <= plan.predicted_time * (1 + 1e-9)

@@ -1,0 +1,343 @@
+"""Chaos simulator + closed-loop elastic training: unit, property, and
+golden-trace regression tests.
+
+The golden logs under tests/fixtures/ were produced by
+``run_chaos_sim(seed)`` on the reference machine.  Replay guarantees:
+
+  * in-process: two runs from the same seed are BIT-identical (exact
+    float equality on the whole (m, objective, decision) sequence);
+  * cross-machine: the control sequence (events, m, mitigations,
+    decisions, restores) is exact, objectives match to float tolerance
+    (BLAS reduction order may differ between machines).
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.runtime.chaos import (
+    ChaosEvent,
+    ChaosRunLog,
+    ChaosTrace,
+    ClusterSim,
+    replay,
+    run_chaos_sim,
+)
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+
+# ------------------------------------------------------------------ trace
+def test_trace_generation_is_deterministic():
+    a = ChaosTrace.generate(7, 200, 4)
+    b = ChaosTrace.generate(7, 200, 4)
+    assert a.events == b.events
+    c = ChaosTrace.generate(8, 200, 4)
+    assert a.events != c.events
+
+
+def test_trace_json_roundtrip(tmp_path):
+    t = ChaosTrace.generate(3, 120, 4)
+    p = tmp_path / "trace.json"
+    t.save(p)
+    t2 = ChaosTrace.load(p)
+    assert t2 == t
+
+
+def test_runlog_json_roundtrip(tmp_path):
+    t = ChaosTrace.generate(3, 10, 2)
+    log = ChaosRunLog(trace=t, meta={"seed": 3})
+    log.append(step=0, m=2, objective=1.5, events=[], wall_s=1.0)
+    p = tmp_path / "log.json"
+    log.save(p)
+    log2 = ChaosRunLog.load(p)
+    assert log2.signature() == log.signature()
+    assert log2.trace == t
+
+
+# ------------------------------------------------------------------ sim
+def test_cluster_sim_straggler_lifecycle():
+    trace = ChaosTrace(seed=0, n_hosts=2, steps=20, events=[
+        ChaosEvent(step=3, kind="straggler_on", host=1, magnitude=4.0,
+                   duration=5)])
+    sim = ClusterSim(trace)
+    sim.advance(0)
+    base = sim.step_time(2, 1.0, 32)
+    sim.advance(3)
+    slow = sim.step_time(2, 1.0, 32)
+    assert slow > 3.0 * base * 0.8
+    # host 0 unaffected -> SSP mask excluding host 1 restores the pace
+    masked = sim.step_time(2, 1.0, 32, sync_mask={0: True, 1: False})
+    assert masked == pytest.approx(base)
+    sim.advance(8)  # duration elapsed -> auto recovery
+    assert sim.step_time(2, 1.0, 32) == pytest.approx(base)
+
+
+def test_cluster_sim_mitigations_normalize_step_time():
+    trace = ChaosTrace(seed=0, n_hosts=2, steps=10, events=[
+        ChaosEvent(step=1, kind="straggler_on", host=0, magnitude=3.0)])
+    sim = ClusterSim(trace)
+    sim.advance(0)
+    base = sim.step_time(2, 1.0, 32)
+    sim.advance(1)
+    assert sim.step_time(2, 1.0, 32) > 2.0 * base
+    sim.rebalance(0)   # shrink the slow host's shard
+    assert sim.step_time(2, 1.0, 32) == pytest.approx(base, rel=1e-6)
+    sim.hot_spare(0)   # swap for a standby: multiplier and weight reset
+    assert sim.step_time(2, 1.0, 32) == pytest.approx(base, rel=1e-6)
+
+
+def test_cluster_sim_overlapping_faults_extend_not_cancel():
+    """An older event's expiry must not end a newer overlapping event of
+    the same kind early (keyed expiries, latest wins)."""
+    trace = ChaosTrace(seed=0, n_hosts=2, steps=20, events=[
+        ChaosEvent(step=1, kind="slowdown", host=-1, magnitude=1.5,
+                   duration=5),                       # expires at 6
+        ChaosEvent(step=3, kind="slowdown", host=-1, magnitude=1.8,
+                   duration=8)])                      # expires at 11
+    sim = ClusterSim(trace)
+    for step in range(7):
+        sim.advance(step)
+    assert sim.slowdown == pytest.approx(1.8), \
+        "older expiry cancelled the newer slowdown"
+    for step in range(7, 12):
+        sim.advance(step)
+    assert sim.slowdown == 1.0
+
+
+def test_loop_unrelaxes_recovered_host():
+    """sync_relax is a mitigation, not a mode: when the straggler's fault
+    expires the host rejoins every barrier and the executor returns to
+    full-sync H=1."""
+    import jax.numpy as jnp
+
+    from repro.core.adaptive import AdaptiveController
+    from repro.optim.problems import ERMProblem, synthetic_mnist
+    from repro.optim.simcluster import SSPLocalSGD
+    from repro.runtime.chaos import ChaosLoop, default_system_model
+
+    # magnitude 1.7: flagged (>1.5x) but mild (<2x) -> sync_relax
+    trace = ChaosTrace(seed=0, n_hosts=2, steps=40, events=[
+        ChaosEvent(step=10, kind="straggler_on", host=1, magnitude=1.7,
+                   duration=12)])
+    X, y = synthetic_mnist(n=256, d=16, effective_rank=8, seed=0)
+    problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-2,
+                         loss="smooth_hinge")
+    executor = SSPLocalSGD(problem, 2, lr0=0.01, seed=0)
+    controller = AdaptiveController(
+        default_system_model(), target_gap=0.02, p_star=0.0,
+        m_options=[2], min_observations=10 ** 6)   # resizes disabled
+    loop = ChaosLoop(ClusterSim(trace), executor, controller,
+                     base_compute_s=1.0, d=16, relax_local_steps=3)
+    log = loop.run()
+    relaxations = [r for r in log.rows
+                   if (r.get("mitigation") or "").startswith("sync_relax")]
+    assert relaxations, "mild straggler must trigger sync_relax"
+    assert executor.local_steps == 1, "H must return to 1 after recovery"
+    assert not loop._relaxed, "recovered host must rejoin every barrier"
+
+
+def test_cluster_sim_membership():
+    trace = ChaosTrace(seed=0, n_hosts=4, steps=10, events=[
+        ChaosEvent(step=2, kind="leave", host=3),
+        ChaosEvent(step=5, kind="join", host=-1)])
+    sim = ClusterSim(trace)
+    sim.advance(0)
+    assert sim.capacity == 4
+    sim.advance(2)
+    assert sim.capacity == 3 and 3 not in sim.hosts()
+    sim.advance(5)
+    assert sim.capacity == 4   # fresh host id, not the departed one
+    assert 3 not in sim.hosts()
+
+
+def test_cluster_sim_never_drops_below_one_host():
+    trace = ChaosTrace(seed=0, n_hosts=2, steps=10, events=[
+        ChaosEvent(step=1, kind="leave", host=0),
+        ChaosEvent(step=2, kind="leave", host=1)])
+    sim = ClusterSim(trace)
+    sim.advance(1)
+    sim.advance(2)   # refused: the last host cannot leave
+    assert sim.capacity == 1
+
+
+# ------------------------------------------------------------- closed loop
+@pytest.fixture(scope="module")
+def seed0_log():
+    return run_chaos_sim(0)
+
+
+def test_closed_loop_fires_mitigation_and_resize(seed0_log):
+    """Acceptance: seed 0 produces >=1 straggler mitigation and >=1
+    ResizeDecision, and the objective genuinely improves."""
+    assert seed0_log.n_mitigations() >= 1
+    assert seed0_log.n_resizes() >= 1
+    objs = [r["objective"] for r in seed0_log.rows]
+    assert objs[-1] < objs[0] * 0.8
+    assert all(np.isfinite(o) for o in objs)
+
+
+def test_closed_loop_replay_bit_identical(seed0_log):
+    """Replaying the emitted run log (same seed, same trace) reproduces
+    the identical (m, objective, decision) sequence — exact equality."""
+    again = replay(seed0_log)
+    assert again.signature() == seed0_log.signature()
+    assert again.meta["final_m"] == seed0_log.meta["final_m"]
+
+
+def test_preemption_flows_through_injector_and_restores(seed0_log):
+    restores = [r for r in seed0_log.rows if r.get("restore")]
+    preempts = [r for r in seed0_log.rows
+                if any(e.startswith("preempt") for e in r["events"])]
+    assert preempts, "seed 0's trace must contain an assigned preemption"
+    assert restores, "preemption must trigger a checkpoint restore"
+    # a restored step performs no optimization work
+    assert all(r["step_s"] == 0.0 for r in restores)
+
+
+# ------------------------------------------------------- golden regression
+@pytest.mark.parametrize("seed", [0, 1])
+def test_golden_trace_replay(seed, seed0_log):
+    """The checked-in golden run logs replay exactly (control sequence)
+    and to float tolerance (objectives) on any machine."""
+    golden = ChaosRunLog.load(FIXTURES / f"chaos_golden_seed{seed}.json")
+    log = seed0_log if seed == 0 else run_chaos_sim(seed)
+    assert len(log.rows) == len(golden.rows)
+    for got, want in zip(log.rows, golden.rows):
+        assert got["step"] == want["step"]
+        assert got["m"] == want["m"]
+        assert got["events"] == want["events"]
+        assert got.get("mitigation") == want.get("mitigation")
+        assert got.get("decision") == want.get("decision")
+        assert got.get("restore") == want.get("restore")
+        assert got["objective"] == pytest.approx(want["objective"],
+                                                 rel=1e-4, abs=1e-6)
+    assert log.meta["final_m"] == golden.meta["final_m"]
+
+
+def test_golden_fixture_is_self_consistent():
+    """The fixture's embedded trace regenerates from its recorded seed —
+    golden files cannot silently drift from the generator."""
+    golden = ChaosRunLog.load(FIXTURES / "chaos_golden_seed1.json")
+    regen = ChaosTrace.generate(golden.trace.seed, golden.trace.steps,
+                                golden.trace.n_hosts)
+    assert regen == golden.trace
+
+
+# ----------------------------------------------------------- SSP executor
+def test_ssp_relax_changes_trajectory():
+    """sync_relax (H>1 + a worker skipping the barrier) must have a real
+    algorithmic effect: the objective sequence diverges from full-sync."""
+    import jax.numpy as jnp
+
+    from repro.optim.problems import ERMProblem, synthetic_mnist
+    from repro.optim.simcluster import SSPLocalSGD
+
+    X, y = synthetic_mnist(n=256, d=16, effective_rank=8, seed=0)
+    problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-2,
+                         loss="smooth_hinge")
+    full = SSPLocalSGD(problem, 4, lr0=0.01, seed=0)
+    ssp = SSPLocalSGD(problem, 4, lr0=0.01, seed=0)
+    full_objs, ssp_objs = [], []
+    for t in range(30):
+        full_objs.append(full.outer_step())
+        if t == 10:
+            ssp.relax(2)
+        mask = [True, True, True, t % 4 == 0] if t >= 10 else None
+        ssp_objs.append(ssp.outer_step(mask))
+    assert full_objs[:10] == ssp_objs[:10], "identical until relaxation"
+    assert full_objs[10:] != ssp_objs[10:], "relaxation must change it"
+    assert np.isfinite(ssp_objs).all()
+
+
+def test_ssp_checkpoint_restore_rewinds():
+    import jax.numpy as jnp
+
+    from repro.optim.problems import ERMProblem, synthetic_mnist
+    from repro.optim.simcluster import SSPLocalSGD
+
+    X, y = synthetic_mnist(n=256, d=16, effective_rank=8, seed=1)
+    problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-2,
+                         loss="smooth_hinge")
+    ex = SSPLocalSGD(problem, 2, lr0=0.01, seed=0)
+    for _ in range(5):
+        ex.outer_step()
+    ex.checkpoint()
+    branch_a = [ex.outer_step() for _ in range(5)]
+    ex.restore()
+    branch_b = [ex.outer_step() for _ in range(5)]
+    assert branch_a == branch_b, "restore must rewind deterministically"
+
+
+def test_ssp_resize_preserves_iterate():
+    import jax.numpy as jnp
+
+    from repro.optim.problems import ERMProblem, synthetic_mnist
+    from repro.optim.simcluster import SSPLocalSGD
+
+    X, y = synthetic_mnist(n=256, d=16, effective_rank=8, seed=2)
+    problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-2,
+                         loss="smooth_hinge")
+    ex = SSPLocalSGD(problem, 2, lr0=0.01, seed=0)
+    for _ in range(5):
+        ex.outer_step()
+    obj_before = float(problem.primal(ex.w))
+    ex.resize(4)
+    assert ex.m == 4 and ex.W.shape == (4, problem.d)
+    obj_after = float(problem.primal(ex.w))
+    assert obj_after == pytest.approx(obj_before)
+
+
+# ------------------------------------------------------------ straggler+
+def test_monitor_host_attribution_and_reset():
+    from repro.runtime.straggler import StragglerMonitor
+
+    mon = StragglerMonitor(consecutive=2, min_ratio=1.5)
+    for step in range(10):
+        mon.observe(step, 1.0, host_times={0: 0.5, 1: 0.5})
+    ev = None
+    for step in range(10, 14):
+        ev = ev or mon.observe(step, 3.0, host_times={0: 0.5, 1: 2.9})
+    assert ev is not None and ev.host == 1
+    # cluster-wide slowdown: no single host stands out -> no target
+    mon.reset()
+    for step in range(10):
+        mon.observe(step, 1.0, host_times={0: 0.5, 1: 0.5})
+    ev = None
+    for step in range(10, 14):
+        ev = ev or mon.observe(step, 2.0, host_times={0: 1.0, 1: 1.0})
+    assert ev is not None and ev.host == -1
+
+
+def test_injector_schedule_mid_run():
+    from repro.runtime.failures import FailureInjector, SimulatedFailure
+
+    inj = FailureInjector()
+    inj.check(5)   # nothing armed
+    inj.schedule(7)
+    with pytest.raises(SimulatedFailure):
+        inj.check(7)
+    inj.check(7)   # fires once
+
+
+# ----------------------------------------------------------- LM loop (slow)
+@pytest.mark.slow
+def test_chaos_lm_loop_end_to_end(tmp_path):
+    """The closed loop over the REAL trainer: a crafted trace forces a
+    straggler (mitigated) and a preemption (restored from checkpoint),
+    the controller resizes through the elastic re-shard path, and the
+    loss still goes down."""
+    from repro.launch.train import run_chaos_lm
+
+    trace = ChaosTrace(seed=0, n_hosts=4, steps=70, events=[
+        ChaosEvent(step=30, kind="straggler_on", host=0, magnitude=3.0,
+                   duration=8),
+        ChaosEvent(step=50, kind="preempt", host=0)])
+    log = run_chaos_lm("stablelm-1.6b", trace, str(tmp_path))
+    assert len(log.rows) == 70
+    assert log.n_resizes() >= 1, "controller never resized"
+    assert log.n_mitigations() >= 1, "straggler never mitigated"
+    assert any(r.get("restore") for r in log.rows), "preemption not restored"
+    losses = [r["objective"] for r in log.rows]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.5

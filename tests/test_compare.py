@@ -1,0 +1,82 @@
+"""benchmarks/compare.py exit-code contract (consumed by CI perf-smoke):
+0 = within ratio, 1 = regression or new ERROR row, 2 = unusable input."""
+import json
+
+import pytest
+
+from benchmarks import compare
+
+
+def payload(rows):
+    return {"rows": [{"name": n, "us_per_call": us} for n, us in rows]}
+
+
+def write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload(rows)))
+    return str(p)
+
+
+BASE = [("core/lasso_cv", 50_000.0), ("serve/schedule", 8_000.0),
+        ("kernels/flash", 9_000.0),      # excluded prefix: never gated
+        ("serve/tiny", 10.0)]            # below --min-us: never gated
+
+
+def test_exit_0_when_within_ratio(tmp_path, capsys):
+    base = write(tmp_path, "base.json", BASE)
+    cur = write(tmp_path, "cur.json",
+                [("core/lasso_cv", 90_000.0), ("serve/schedule", 8_100.0),
+                 ("kernels/flash", 100_000.0),   # 11x but excluded
+                 ("serve/tiny", 500.0)])         # 50x but sub-threshold
+    assert compare.main([base, cur]) == 0
+    assert "2 rows within" in capsys.readouterr().out
+
+
+def test_exit_1_on_regression(tmp_path):
+    base = write(tmp_path, "base.json", BASE)
+    cur = write(tmp_path, "cur.json",
+                [("core/lasso_cv", 200_000.0),   # 4x > 2.5x
+                 ("serve/schedule", 8_000.0)])
+    assert compare.main([base, cur]) == 1
+    # a looser gate lets the same payload pass
+    assert compare.main([base, cur, "--max-ratio", "5.0"]) == 0
+
+
+def test_exit_1_on_new_error_row(tmp_path):
+    base = write(tmp_path, "base.json", BASE)
+    cur = write(tmp_path, "cur.json",
+                [("core/lasso_cv", 50_000.0), ("serve/schedule", 8_000.0),
+                 ("serve/engine/ERROR", 1.0)])
+    assert compare.main([base, cur]) == 1
+
+
+def test_exit_2_on_missing_file(tmp_path):
+    base = write(tmp_path, "base.json", BASE)
+    assert compare.main([base, str(tmp_path / "nope.json")]) == 2
+
+
+def test_exit_2_on_unreadable_json(tmp_path):
+    base = write(tmp_path, "base.json", BASE)
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert compare.main([base, str(bad)]) == 2
+    schema = tmp_path / "schema.json"
+    schema.write_text(json.dumps({"rows": [{"nome": "x"}]}))
+    assert compare.main([base, str(schema)]) == 2
+
+
+def test_exit_2_when_no_comparable_rows(tmp_path):
+    base = write(tmp_path, "base.json", [("kernels/flash", 9_000.0)])
+    cur = write(tmp_path, "cur.json", [("kernels/flash", 9_000.0)])
+    assert compare.main([base, cur]) == 2
+
+
+@pytest.mark.parametrize("missing_side", ["baseline_only", "current_only"])
+def test_one_sided_rows_reported_not_gated(tmp_path, missing_side, capsys):
+    rows = [("core/lasso_cv", 50_000.0), ("serve/schedule", 8_000.0)]
+    extra = [("serve/new_bench", 99_000.0)]
+    base = write(tmp_path, "base.json",
+                 rows + (extra if missing_side == "baseline_only" else []))
+    cur = write(tmp_path, "cur.json",
+                rows + (extra if missing_side == "current_only" else []))
+    assert compare.main([base, cur]) == 0

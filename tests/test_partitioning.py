@@ -65,17 +65,27 @@ def test_override():
     assert spec == P(None, "data")
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.sampled_from(
-    ["embed", "mlp", "vocab", "heads_flat", "kv_flat", "expert", "norm",
-     "layers", None]), min_size=1, max_size=4),
-    st.integers(0, 2**31 - 1))
-def test_resolution_properties(logical, seed):
-    """No mesh axis appears twice; sharded dims always divide."""
-    rng = np.random.RandomState(seed)
-    r = rules_2d()
-    shape = tuple(int(rng.choice([1, 8, 16, 64, 256, 1024])) for _ in logical)
-    spec = r.param_pspec(tuple(logical), shape)
+PARAM_AXES = ["embed", "mlp", "vocab", "heads_flat", "kv_flat", "expert",
+              "norm", "layers", None]
+ACT_AXES = ["batch", "cache_batch", "act_heads", "act_mlp", "seq",
+            "cache_seq", "cache_head_dim", "act_embed", None]
+
+
+def _random_mesh(rng):
+    """Random 2d/3d mesh with power-of-two axis sizes — divisibility
+    fallback must hold for ANY mesh geometry, not just 16x16."""
+    if rng.rand() < 0.5:
+        shape = (int(rng.choice([2, 4, 8, 16])), int(rng.choice([2, 4, 8, 16])))
+        names = ("data", "model")
+    else:
+        shape = (2, int(rng.choice([2, 4, 8])), int(rng.choice([2, 4, 8, 16])))
+        names = ("pod", "data", "model")
+    return Rules.default(FakeMesh(shape, names)), dict(zip(names, shape))
+
+
+def _check_spec(spec, shape, sizes):
+    """The two resolution invariants: no mesh axis claimed twice, and a
+    sharded dim always divides the product of its axes' sizes."""
     seen = []
     for dim, entry in enumerate(tuple(spec)):
         if entry is None:
@@ -85,8 +95,52 @@ def test_resolution_properties(logical, seed):
         for a in axes:
             assert a not in seen, f"axis {a} repeated in {spec}"
             seen.append(a)
-            prod *= 16
-        assert shape[dim] % prod == 0, (spec, shape)
+            prod *= sizes[a]
+        assert shape[dim] % prod == 0, (spec, shape, sizes)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from(PARAM_AXES), min_size=1, max_size=4),
+       st.integers(0, 2**31 - 1))
+def test_param_resolution_properties(logical, seed):
+    """No mesh axis appears twice; sharded dims always divide — for random
+    parameter shapes on random mesh geometries."""
+    rng = np.random.RandomState(seed)
+    r, sizes = _random_mesh(rng)
+    shape = tuple(int(rng.choice([1, 2, 6, 8, 16, 64, 256, 1024]))
+                  for _ in logical)
+    _check_spec(r.param_pspec(tuple(logical), shape), shape, sizes)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from(ACT_AXES), min_size=1, max_size=4),
+       st.integers(0, 2**31 - 1))
+def test_act_resolution_properties(logical, seed):
+    """Same invariants for activation/cache logical axes, including the
+    tuple batch entries ("pod", "data") whose prefixes must also divide."""
+    rng = np.random.RandomState(seed)
+    r, sizes = _random_mesh(rng)
+    shape = tuple(int(rng.choice([1, 2, 6, 8, 16, 64, 256, 1024]))
+                  for _ in logical)
+    _check_spec(r.act_pspec(tuple(logical), shape), shape, sizes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_resolution_without_shape_never_repeats_axes(seed):
+    """Shape-less resolution (shardings for ShapeDtypeStruct-free paths)
+    still obeys dedupe on any mesh."""
+    rng = np.random.RandomState(seed)
+    r, sizes = _random_mesh(rng)
+    names = [PARAM_AXES[i] for i in
+             rng.choice(len(PARAM_AXES), size=rng.randint(1, 5))]
+    spec = r.param_pspec(tuple(names))
+    flat = []
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        flat.extend(entry if isinstance(entry, tuple) else (entry,))
+    assert len(flat) == len(set(flat)), spec
 
 
 def test_batch_axes_and_model_axis():

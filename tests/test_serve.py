@@ -1,7 +1,12 @@
 """Serve subsystem: allocator/scheduler invariants, paged-decode equivalence,
-prefix-reuse exactness, and the CapacityPlanner fit/query round-trip."""
+prefix-reuse exactness, and the CapacityPlanner fit/query round-trip.
+
+The allocator is covered by property-based tests (random alloc/share/free
+schedules against a shadow refcount model) rather than hand-picked edge
+cases — the invariants hold under ANY schedule, so that is what we test."""
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.serve import CapacityPlanner, OutOfPages, PagePool, ServeEngine
 from repro.serve.paging import SCRATCH_PAGE
@@ -15,21 +20,72 @@ def _prompt(rng, n):
 
 
 # ---------------------------------------------------------------- allocator
-def test_page_pool_alloc_share_free():
-    pool = PagePool(num_pages=6, page_size=8)
-    assert pool.pages_in_use == 0 and pool.free_pages == 5
-    pages = pool.alloc(3)
-    assert SCRATCH_PAGE not in pages
-    assert pool.pages_in_use == 3
-    pool.share(pages[:1])
-    pool.free(pages)  # shared page survives with one ref
-    assert pool.pages_in_use == 1
-    pool.free(pages[:1])
-    assert pool.pages_in_use == 0 and pool.free_pages == 5
-    with pytest.raises(OutOfPages):
-        pool.alloc(6)
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 24))
+def test_page_pool_random_schedule_invariants(seed, num_pages):
+    """Under a random alloc/share/free schedule the pool matches a shadow
+    refcount model exactly: conservation (free + in-use = capacity), no
+    scratch handout, OutOfPages exactly when the free list is short, and
+    zero leaked pages once every reference is dropped."""
+    rng = np.random.RandomState(seed)
+    pool = PagePool(num_pages=num_pages, page_size=8)
+    shadow = {}  # page -> refcount (live pages only)
+    for _ in range(200):
+        op = rng.choice(["alloc", "share", "free"])
+        live = [p for p, c in shadow.items() if c > 0]
+        if op == "alloc":
+            n = int(rng.randint(1, max(num_pages // 2, 2)))
+            if n > pool.free_pages:
+                with pytest.raises(OutOfPages):
+                    pool.alloc(n)
+            else:
+                got = pool.alloc(n)
+                assert len(got) == n == len(set(got))
+                assert SCRATCH_PAGE not in got
+                assert not any(p in live for p in got), "handed out live page"
+                for p in got:
+                    shadow[p] = 1
+        elif op == "share" and live:
+            take = [p for p in live if rng.rand() < 0.3] or [live[0]]
+            pool.share(take)
+            for p in take:
+                shadow[p] += 1
+        elif op == "free" and live:
+            take = [p for p in live if rng.rand() < 0.4] or [live[0]]
+            pool.free(take)
+            for p in take:
+                shadow[p] -= 1
+        # invariants after every operation
+        in_use = sum(1 for c in shadow.values() if c > 0)
+        assert pool.pages_in_use == in_use
+        assert pool.free_pages + in_use == num_pages - 1  # scratch pinned
+        for p, c in shadow.items():
+            assert pool.refcount(p) == c
+    # drain every remaining reference -> no leaks
+    for p, c in list(shadow.items()):
+        if c > 0:
+            pool.free([p] * c)
+    assert pool.pages_in_use == 0
+    assert pool.free_pages == num_pages - 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_page_pool_rejects_invalid_ops(seed):
+    """Double free, freeing/sharing the scratch page, and sharing dead
+    pages are errors under any state the pool can reach."""
+    rng = np.random.RandomState(seed)
+    pool = PagePool(num_pages=int(rng.randint(3, 12)), page_size=8)
+    pages = pool.alloc(int(rng.randint(1, pool.free_pages + 1)))
+    pool.free(pages)
     with pytest.raises(ValueError):
-        pool.free(pages[:1])  # double free
+        pool.free(pages[:1])          # double free
+    with pytest.raises(ValueError):
+        pool.share(pages[:1])         # share after death
+    with pytest.raises(ValueError):
+        pool.free([SCRATCH_PAGE])     # scratch is pinned
+    with pytest.raises(ValueError):
+        pool.share([SCRATCH_PAGE])
 
 
 # ---------------------------------------------------------------- scheduler
