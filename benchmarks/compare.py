@@ -3,6 +3,13 @@
 Usage:
   python -m benchmarks.compare BASELINE.json CURRENT.json [--max-ratio 2.5]
       [--min-us 1000]
+  python -m benchmarks.compare . CURRENT.json        # newest BENCH_*.json
+
+When BASELINE is a directory it resolves to the newest ``BENCH_*.json``
+inside it: highest trailing PR number first (``BENCH_pr4.json`` beats
+``BENCH_baseline_pr1.json``), modification time as the tie-break.  This is
+how CI tracks the bench trajectory — each PR that records a snapshot
+automatically becomes the next PR's baseline.
 
 Exit-code contract (consumed by the CI ``perf-smoke`` job):
   0  no comparable row regressed beyond ``--max-ratio``
@@ -32,9 +39,26 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
 import sys
 
 EXCLUDED_PREFIXES = ("kernels/", "roofline/")
+
+
+def newest_baseline(directory: str) -> str:
+    """Newest BENCH_*.json in ``directory``: max PR number, then mtime."""
+    candidates = []
+    for name in os.listdir(directory):
+        if not (name.startswith("BENCH_") and name.endswith(".json")):
+            continue
+        path = os.path.join(directory, name)
+        m = re.search(r"(\d+)\.json$", name)
+        pr = int(m.group(1)) if m else -1
+        candidates.append((pr, os.path.getmtime(path), path))
+    if not candidates:
+        raise FileNotFoundError(f"no BENCH_*.json under {directory!r}")
+    return max(candidates)[2]
 
 
 def load_rows(path: str) -> dict:
@@ -68,7 +92,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     try:
-        base = load_rows(args.baseline)
+        baseline_path = (
+            newest_baseline(args.baseline)
+            if os.path.isdir(args.baseline)
+            else args.baseline
+        )
+        if baseline_path != args.baseline:
+            print(f"compare: baseline resolved to {baseline_path}")
+        base = load_rows(baseline_path)
         cur = load_rows(args.current)
     except (OSError, ValueError, KeyError) as e:
         print(f"compare: cannot load payloads: {e}", file=sys.stderr)

@@ -188,6 +188,8 @@ def planner_e2e(ctx: BenchContext) -> List[Row]:
     planner = Planner(models)
     eps = 1e-3
     decision = planner.fastest_to_epsilon(eps, m_grid=list(ctx.ms))
+    if not decision:   # NoFeasiblePlan -> surface as this figure's ERROR row
+        raise RuntimeError(f"planner infeasible: {decision.reason}")
     # oracle: true time to reach eps from the simulated curves
     oracle = {}
     for algo in ("cocoa", "cocoa+"):
@@ -221,6 +223,8 @@ def budget_query(ctx: BenchContext) -> List[Row]:
     rows = []
     for budget in (2.0, 10.0):
         d = planner.best_within_budget(budget, m_grid=list(ctx.ms))
+        if not d:
+            raise RuntimeError(f"budget query infeasible: {d.reason}")
         rows.append((f"planner/budget_{budget:.0f}s", 0.0,
                      f"m={d.m};pred_value={d.predicted_value:.4f}"))
     return rows

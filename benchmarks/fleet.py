@@ -1,0 +1,43 @@
+"""Fleet scheduler benchmarks: decision throughput + end-to-end day cost.
+
+Rows (pure-python: gated by benchmarks/compare.py against the newest
+BENCH_*.json baseline):
+
+  fleet/sched_tick   — mean microseconds per scheduler tick (the placement
+                       hot path: capacity planning, admission, resize)
+  fleet/day_e2e      — wall microseconds for the canonical 24h seed-0 day
+  fleet/day_cost     — derived fleet-efficiency metric: host-hours spent,
+                       SLO outcome, decision count (not a timing row)
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def bench_fleet() -> List[Row]:
+    from repro.fleet import run_fleet_sim
+
+    rows: List[Row] = []
+    run_fleet_sim(0, ticks=24)   # warmup: imports, one NNLS fit round
+
+    t0 = time.perf_counter()
+    log = run_fleet_sim(0)
+    day_s = time.perf_counter() - t0
+    ticks = len(log.rows)
+    s = log.meta["summary"]
+
+    rows.append(("fleet/sched_tick", day_s / ticks * 1e6,
+                 f"ticks={ticks};decisions={log.n_decisions()}"))
+    rows.append(("fleet/day_e2e", day_s * 1e6,
+                 f"ticks={ticks};hosts={log.trace.n_hosts}"))
+    slo_ok = all(d["slo_met"] for d in s["serve"].values())
+    jobs_ok = all(j["state"] == "done" and j["met_deadline"]
+                  for j in s["jobs"].values())
+    rows.append(("fleet/day_cost", 0.0,
+                 f"host_hours={s['cost_host_hours']:.1f};"
+                 f"slo_met={slo_ok};deadlines_met={jobs_ok};"
+                 f"resizes={s['n_resize_decisions']}"))
+    return rows

@@ -60,6 +60,13 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         rows.append(("kernels/ERROR", 0.0, f"{type(e).__name__}:{e}"))
 
+    try:
+        from benchmarks.fleet import bench_fleet
+
+        rows.extend(bench_fleet())
+    except Exception as e:  # noqa: BLE001
+        rows.append(("fleet/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
     # roofline summary from dry-run artifacts (if the sweep has been run)
     try:
         from benchmarks.roofline import load_results, roofline_fraction

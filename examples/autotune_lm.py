@@ -61,6 +61,7 @@ def main():
     target = float(np.median([c[-1] for c in curves.values()])) + 0.1
     planner = Planner({"adamw-dp": CombinedModel(sysm, conv, 1.0, 5_000)})
     d = planner.fastest_to_epsilon(target - floor, m_grid=[1, 2, 4, 8])
+    assert d, f"unexpectedly infeasible: {d.reason}"
     print(f"target loss {target:.3f}: planner picks m={d.m} "
           f"(predicted {d.predicted_time:.1f}s) — note m=8 was never run; "
           "the model extrapolated it (paper §4.1).")

@@ -1,0 +1,102 @@
+"""A 24h multi-tenant fleet day: 3 training jobs + 2 serving deployments
+sharing 24 simulated hosts under diurnal load and injected chaos.
+
+The scheduler places every workload by its Hemingway model (no workload is
+executed to discover its needs), preempts training when serving needs the
+capacity, resizes jobs against their deadlines, and emits a replayable
+``FleetRunLog``.  This script is the acceptance scenario: it asserts
+
+  * every serve deployment meets its p95 latency SLO over the day,
+  * every training job reaches epsilon before its deadline or carries an
+    explicit typed ``NoFeasiblePlan``,
+  * the run log replays bit-identically from the same seed (the guarantee
+    the golden fixture tests/fixtures/fleet_golden_seed0.json pins down).
+
+  PYTHONPATH=src python examples/fleet_day.py --seed 0
+  PYTHONPATH=src python examples/fleet_day.py --seed 0 --out day.json
+  PYTHONPATH=src python examples/fleet_day.py --seed 0 --real-convex
+"""
+import os
+
+# keep the examples runnable in CI shells that do not export a JAX
+# platform: force CPU before jax (via repro) is ever imported
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+from pathlib import Path
+
+GOLDEN = (Path(__file__).resolve().parents[1] / "tests" / "fixtures"
+          / "fleet_golden_seed0.json")
+
+
+def attach_real_convex(jobs):
+    """Back job_sweep with a real SSPLocalSGD executor: every scheduler
+    resize then re-partitions an actual optimization run (the same
+    executor contract launch/train.py's TrainerExecutor implements via
+    elastic.rescale_training_state)."""
+    import jax.numpy as jnp
+
+    from repro.optim.problems import ERMProblem, synthetic_mnist
+    from repro.optim.simcluster import SSPLocalSGD
+
+    X, y = synthetic_mnist(n=256, d=16, effective_rank=8, seed=0)
+    problem = ERMProblem(jnp.asarray(X), jnp.asarray(y), lam=1e-2,
+                         loss="smooth_hinge")
+    for job in jobs:
+        if job.name == "job_sweep":
+            job.executor = SSPLocalSGD(problem, min(job.m_options),
+                                       lr0=0.01, seed=0)
+            job.executor.checkpoint()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write run log JSON here")
+    ap.add_argument("--real-convex", action="store_true",
+                    help="drive job_sweep with a real SSPLocalSGD executor "
+                         "through the elastic resize path")
+    ap.add_argument("--no-replay", action="store_true")
+    args = ap.parse_args()
+
+    from repro.fleet import FleetSimulator, build_day_scenario, replay
+    from repro.launch.fleet import summarize
+
+    trace, jobs, deployments, cfg = build_day_scenario(args.seed)
+    if args.real_convex:
+        attach_real_convex(jobs)
+    log = FleetSimulator(trace, jobs, deployments, cfg).run()
+    log.meta.update(seed=args.seed, ticks=trace.steps, scenario="day")
+    summarize(log)
+
+    summary = log.meta["summary"]
+    for name, d in summary["serve"].items():
+        assert d["slo_met"], \
+            f"{name} violated its SLO: p95={d['p95_s']:.3f}s > {d['slo_p95_s']}s"
+    for name, j in summary["jobs"].items():
+        ok = (j["state"] == "done" and j["met_deadline"]) \
+            or j["no_plan"] is not None
+        assert ok, f"{name}: state={j['state']} with no NoFeasiblePlan record"
+    print("acceptance: all serve SLOs met at p95; every training job met "
+          "its deadline or holds a typed NoFeasiblePlan ✓")
+
+    if not args.no_replay and not args.real_convex:
+        log2 = replay(log)
+        assert log.signature() == log2.signature(), \
+            "replay diverged from the original run"
+        print("replay: identical decision/allocation sequence ✓")
+        if args.seed == 0 and GOLDEN.exists():
+            from repro.fleet import FleetRunLog
+            golden = FleetRunLog.load(GOLDEN)
+            # control sequence only: floats are machine-dependent and are
+            # compared to tolerance by tests/test_fleet.py instead
+            assert log.control_signature() == golden.control_signature(), \
+                "run diverged from tests/fixtures/fleet_golden_seed0.json"
+            print("golden: matches the checked-in seed-0 fixture ✓")
+    if args.out:
+        log.save(args.out)
+        print(f"run log -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,8 +49,10 @@ combined = CombinedModel(sys_model, conv_model, data_size=problem.n,
                          max_iters=10_000)
 planner = Planner({"cocoa": combined})
 d1 = planner.fastest_to_epsilon(1e-3, m_grid=ms)
+assert d1, f"unexpectedly infeasible: {d1.reason}"
 print(f"[query 1] eps=1e-3  -> use {d1.algorithm} on m={d1.m} "
       f"(predicted {d1.predicted_time:.2f}s)")
 d2 = planner.best_within_budget(5.0, m_grid=ms)
+assert d2, f"unexpectedly infeasible: {d2.reason}"
 print(f"[query 2] t<=5s     -> use {d2.algorithm} on m={d2.m} "
       f"(predicted objective {d2.predicted_value:.5f})")

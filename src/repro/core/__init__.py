@@ -4,7 +4,12 @@ from repro.core.convergence import ConvergenceData, ConvergenceModel
 from repro.core.ernest import ErnestModel
 from repro.core.expdesign import Candidate, default_candidate_grid, greedy_d_optimal
 from repro.core.features import FeatureLibrary
-from repro.core.hemingway import CombinedModel, PlanDecision, Planner
+from repro.core.hemingway import (
+    CombinedModel,
+    NoFeasiblePlan,
+    PlanDecision,
+    Planner,
+)
 from repro.core.lasso import LassoFit, lasso_cv, lasso_fit, r2_score
 from repro.core.nnls import nnls, nnls_fit
 
@@ -17,6 +22,7 @@ __all__ = [
     "ErnestModel",
     "FeatureLibrary",
     "LassoFit",
+    "NoFeasiblePlan",
     "PlanDecision",
     "Planner",
     "ResizeDecision",

@@ -9,7 +9,7 @@ Answers the paper's two query types over a registry of candidate algorithms:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -74,6 +74,29 @@ class PlanDecision:
     table: Optional[Dict[Tuple[str, int], float]] = None
 
 
+@dataclasses.dataclass
+class NoFeasiblePlan:
+    """Typed infeasibility result for the planner queries.
+
+    Returned (not raised) when no (algorithm, m) satisfies the query, so
+    callers that schedule many workloads — the fleet scheduler above all —
+    can treat "this job cannot be satisfied" as data: record the reason,
+    queue or reject the workload, and keep planning the rest of the fleet.
+    ``table`` carries whatever partial predictions were computed, the same
+    shape as ``PlanDecision.table``.
+    """
+
+    query: str
+    reason: str
+    table: Optional[Dict[Tuple[str, int], float]] = None
+
+    def __bool__(self) -> bool:   # `if plan:` reads as "is it feasible?"
+        return False
+
+
+PlanResult = Union[PlanDecision, NoFeasiblePlan]
+
+
 class Planner:
     """The ML-optimizer front end (Fig 2)."""
 
@@ -81,7 +104,7 @@ class Planner:
         self.models = dict(models)
 
     def fastest_to_epsilon(self, eps: float,
-                           m_grid: Sequence[int]) -> PlanDecision:
+                           m_grid: Sequence[int]) -> PlanResult:
         table: Dict[Tuple[str, int], float] = {}
         best: Optional[PlanDecision] = None
         for name, model in self.models.items():
@@ -93,20 +116,32 @@ class Planner:
                 if best is None or t < best.predicted_time:
                     best = PlanDecision(name, int(m), predicted_time=t)
         if best is None:
-            raise ValueError(f"no (algorithm, m) reaches eps={eps}")
+            return NoFeasiblePlan(
+                query="fastest_to_epsilon",
+                reason=f"no (algorithm, m) reaches eps={eps} within "
+                       f"max_iters over {len(self.models)} model(s), "
+                       f"m_grid={list(m_grid)}",
+                table=table)
         best.table = table
         return best
 
     def best_within_budget(self, t_budget: float,
-                           m_grid: Sequence[int]) -> PlanDecision:
+                           m_grid: Sequence[int]) -> PlanResult:
         table: Dict[Tuple[str, int], float] = {}
         best: Optional[PlanDecision] = None
         for name, model in self.models.items():
             for m in m_grid:
                 v = float(model.h(t_budget, int(m))[0])
                 table[(name, int(m))] = v
+                if not np.isfinite(v):
+                    continue
                 if best is None or v < best.predicted_value:
                     best = PlanDecision(name, int(m), predicted_value=v)
-        assert best is not None
+        if best is None:
+            return NoFeasiblePlan(
+                query="best_within_budget",
+                reason=f"no finite prediction within budget {t_budget}s "
+                       f"({len(self.models)} model(s), m_grid={list(m_grid)})",
+                table=table)
         best.table = table
         return best

@@ -1,0 +1,38 @@
+"""Multi-tenant fleet scheduler: training + serving on one simulated
+cluster, every decision priced by a Hemingway model.  See DESIGN.md §9."""
+
+from repro.fleet.cluster import AllocationError, FleetCluster
+from repro.fleet.scheduler import FleetConfig, FleetScheduler
+from repro.fleet.simulate import (
+    FleetRunLog,
+    FleetSimulator,
+    build_day_scenario,
+    replay,
+    run_fleet_sim,
+)
+from repro.fleet.workloads import (
+    AnalyticConvergence,
+    RequestTrace,
+    ServeDeployment,
+    TrainingJob,
+    serve_capacity_planner,
+    training_model,
+)
+
+__all__ = [
+    "AllocationError",
+    "AnalyticConvergence",
+    "FleetCluster",
+    "FleetConfig",
+    "FleetRunLog",
+    "FleetScheduler",
+    "FleetSimulator",
+    "RequestTrace",
+    "ServeDeployment",
+    "TrainingJob",
+    "build_day_scenario",
+    "replay",
+    "run_fleet_sim",
+    "serve_capacity_planner",
+    "training_model",
+]

@@ -1,0 +1,458 @@
+"""Model-driven multi-tenant placement: the fleet scheduler.
+
+One scheduler tick is the Hemingway decision loop lifted to a fleet:
+
+  1. **Reconcile** chaos: hosts that left drop out of allocations (training
+     rolls back to its last checkpoint and shrinks; serving re-acquires),
+     preempted hosts keep their allocation but lose in-flight work.
+  2. **Serve first** (SLO priority): each deployment's replica target comes
+     from ``CapacityPlanner.plan`` against the near-term forecast; scale-ups
+     may preempt training hosts, scale-downs wait out a patience window.
+  3. **Admit training**: ``Planner.fastest_to_epsilon`` over the job's
+     m-options; a typed ``NoFeasiblePlan`` (target unreachable, or no m
+     meets the deadline) marks the job infeasible *as data*.  Among
+     deadline-feasible sizes the scheduler picks the cheapest in
+     host-seconds — minimize fleet cost subject to the deadline.
+  4. **Resize training**: the same remaining-time-vs-reshard-cost tradeoff
+     ``core.adaptive.AdaptiveController`` applies during a single run,
+     re-evaluated fleet-wide; decisions are recorded as
+     ``core.adaptive.ResizeDecision`` and executed through the job's
+     executor (``SSPLocalSGD`` re-partitions; ``launch.train``'s
+     ``TrainerExecutor`` goes through ``elastic.rescale_training_state``).
+  5. **Account**: modeled progress (work fractions, BSP pace = slowest
+     host), per-tick serve latency, cumulative host-seconds.
+
+Everything iterates in sorted order and draws no entropy, so a tick
+sequence is a pure function of (chaos trace, request traces, config) —
+the replay guarantee ``simulate.FleetRunLog`` is built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.adaptive import ResizeDecision
+from repro.core.hemingway import NoFeasiblePlan
+from repro.fleet.cluster import FleetCluster
+from repro.fleet.workloads import ServeDeployment, TrainingJob
+from repro.runtime.chaos import ChaosEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    tick_s: float = 300.0
+    serve_headroom: float = 1.15      # capacity target = forecast * headroom
+    forecast_ticks: int = 3           # plan against the next-N-ticks peak
+    scale_down_patience: int = 3      # consecutive lower targets before down
+    reshard_cost_s: float = 120.0     # paid by a job on every resize
+    restore_cost_s: float = 240.0     # paid on checkpoint restore
+    resize_cooldown_ticks: int = 6    # no-flap guard between job resizes
+    resize_hysteresis: float = 0.85   # resize only for >15% host-second win
+    shrink_safety: float = 0.7        # shrink only into <70% of the slack:
+    #                                   progress pays slack back 1:1, so a
+    #                                   comfortable shrink never needs a
+    #                                   deadline rescue later (no flapping)
+
+
+class FleetScheduler:
+    def __init__(self, cluster: FleetCluster, jobs: Sequence[TrainingJob],
+                 deployments: Sequence[ServeDeployment],
+                 cfg: Optional[FleetConfig] = None):
+        self.cluster = cluster
+        self.cfg = cfg or FleetConfig()
+        self.jobs = {j.name: j for j in jobs}
+        self.deployments = {d.name: d for d in deployments}
+        if set(self.jobs) & set(self.deployments):
+            raise ValueError("workload names must be unique across kinds")
+        self.resize_decisions: List[ResizeDecision] = []
+        self._last_resize: Dict[str, int] = {}
+        self.cost_host_s = 0.0
+
+    # ------------------------------------------------------------------
+    # One tick
+    # ------------------------------------------------------------------
+    def tick(self, step: int, events: List[ChaosEvent],
+             lost: Dict[str, List[int]],
+             preempted: Dict[str, List[int]]) -> Dict[str, Any]:
+        now_s = step * self.cfg.tick_s
+        decisions: List[str] = []
+
+        self._reconcile(step, lost, preempted, decisions)
+        self._autoscale_serve(step, now_s, decisions)
+        self._admit_training(step, now_s, decisions)
+        self._resize_training(step, now_s, decisions)
+        self._account_training(step, now_s, decisions)
+        serve_row = self._account_serve(step, preempted)
+
+        self.cost_host_s += self.cluster.n_allocated() * self.cfg.tick_s
+        return {
+            "step": step,
+            "events": [f"{e.kind}:{e.host}" for e in events],
+            "decisions": decisions,
+            "serve": serve_row,
+            "jobs": {n: j.snapshot() for n, j in sorted(self.jobs.items())},
+            "free": len(self.cluster.free_hosts()),
+            "cost_hh": round(self.cost_host_s / 3600.0, 6),
+        }
+
+    # ------------------------------------------------------------------
+    # 1. chaos reconciliation
+    # ------------------------------------------------------------------
+    def _reconcile(self, step: int, lost: Dict[str, List[int]],
+                   preempted: Dict[str, List[int]],
+                   decisions: List[str]) -> None:
+        for owner in sorted(set(lost) | set(preempted)):
+            if owner in self.deployments:
+                dep = self.deployments[owner]
+                if owner in lost:
+                    dep.replicas = len(self.cluster.owned(owner))
+                    decisions.append(
+                        f"lost:{owner}:{sorted(lost[owner])}")
+                # preempted replicas return fresh: capacity dip is priced
+                # into this tick's latency (exclude list), nothing to do
+            elif owner in self.jobs:
+                self._reconcile_job(self.jobs[owner],
+                                    lost.get(owner, []),
+                                    preempted.get(owner, []), decisions)
+
+    def _rollback(self, job: TrainingJob) -> None:
+        job.progress = job.ckpt_progress
+        job.penalty_s += self.cfg.restore_cost_s
+        job.since_ckpt_s = 0.0
+        if job.executor is not None:
+            job.executor.restore()
+
+    def _reconcile_job(self, job: TrainingJob, lost: List[int],
+                       preempted: List[int], decisions: List[str]) -> None:
+        if job.state != "running":
+            return
+        if lost:
+            survivors = sorted(self.cluster.owned(job.name),
+                               key=lambda h: (self.cluster.host_multiplier(h),
+                                              h))
+            self._rollback(job)
+            # only sizes the model says can still reach eps are acceptable
+            # landing spots; otherwise requeue and let admission re-plan
+            fits = [m for m in job.m_options if m <= len(survivors)
+                    and job.remaining_s(m) is not None]
+            if fits:
+                target = max(fits)
+                self.cluster.release(job.name, survivors[target:])
+                job.m = target
+                if job.executor is not None:
+                    job.executor.resize(target)
+                decisions.append(f"shrink:{job.name}:m={target}:lost_host")
+            else:
+                self.cluster.release_all(job.name)
+                job.state, job.m = "queued", 0
+                decisions.append(f"evict:{job.name}:lost_host")
+        elif preempted:
+            # capacity survives (host returns fresh) but in-flight BSP work
+            # since the last checkpoint is gone
+            self._rollback(job)
+            decisions.append(
+                f"restore:{job.name}:preempt{sorted(preempted)}")
+
+    # ------------------------------------------------------------------
+    # 2. serve autoscaling (SLO priority)
+    # ------------------------------------------------------------------
+    def _autoscale_serve(self, step: int, now_s: float,
+                         decisions: List[str]) -> None:
+        """Capacity-based autoscaling: the target is in *effective* replica
+        units, so a straggling replica or a cluster-wide slowdown shows up
+        as missing capacity and is topped up the same tick (new hosts are
+        priced at their own degraded speed)."""
+        for name in sorted(self.deployments):
+            dep = self.deployments[name]
+            forecast = (dep.trace.forecast(step, self.cfg.forecast_ticks)
+                        * self.cfg.serve_headroom)
+            plan = dep.desired_replicas(forecast)
+            if plan:
+                target = float(plan.m)
+            else:
+                target = float(max(dep.replica_options))
+                decisions.append(f"noplan:{name}:{plan.query}")
+            eff = self.cluster.effective_replicas(name)
+            if eff + 1e-9 < target:
+                need = self._hosts_for_capacity(target - eff)
+                shortfall = need - len(self.cluster.free_hosts())
+                if shortfall > 0:
+                    self._preempt_training_for(shortfall, step, now_s, name,
+                                               decisions)
+                    need = self._hosts_for_capacity(target - eff)
+                grant = min(need, len(self.cluster.free_hosts()))
+                if grant > 0:
+                    old = dep.replicas
+                    self.cluster.allocate(name, grant)
+                    dep.replicas = len(self.cluster.owned(name))
+                    decisions.append(
+                        f"scale_up:{name}:{old}->{dep.replicas}")
+                if grant < need:
+                    decisions.append(f"deficit:{name}:{need - grant}")
+                dep.scale_down_votes = 0
+                continue
+            # scale down: drop the slowest owned hosts while the remaining
+            # effective capacity still covers the target (with patience)
+            drop = self._droppable_hosts(name, eff, target)
+            if drop:
+                dep.scale_down_votes += 1
+                if dep.scale_down_votes >= self.cfg.scale_down_patience:
+                    old = dep.replicas
+                    self.cluster.release(name, drop)
+                    dep.replicas = len(self.cluster.owned(name))
+                    decisions.append(
+                        f"scale_down:{name}:{old}->{dep.replicas}")
+                    dep.scale_down_votes = 0
+            else:
+                dep.scale_down_votes = 0
+
+    def _hosts_for_capacity(self, missing: float) -> int:
+        """How many free hosts (in allocation order, at their current
+        degraded speeds) cover ``missing`` effective replicas; if the whole
+        free pool is short, the remainder is priced at the cluster-wide
+        pace (what a preempted-then-allocated host would run at)."""
+        covered, need = 0.0, 0
+        for h in self.cluster.free_hosts():
+            if covered + 1e-9 >= missing:
+                return need
+            covered += 1.0 / self.cluster.host_multiplier(h)
+            need += 1
+        if covered + 1e-9 < missing:
+            need += math.ceil((missing - covered) * self.cluster.sim.slowdown
+                              - 1e-9)
+        return need
+
+    def _droppable_hosts(self, name: str, eff: float,
+                         target: float) -> List[int]:
+        """Largest suffix of slowest hosts droppable without dipping below
+        the capacity target (slowest-first: they cost a full host of fleet
+        budget but contribute the least capacity)."""
+        owned = sorted(self.cluster.owned(name),
+                       key=lambda h: (-self.cluster.host_multiplier(h), -h))
+        drop: List[int] = []
+        remaining = eff
+        for h in owned[:-1] if len(owned) > 1 else []:
+            contribution = 1.0 / self.cluster.host_multiplier(h)
+            if remaining - contribution + 1e-9 < target:
+                break
+            remaining -= contribution
+            drop.append(h)
+        return drop
+
+    def _preempt_training_for(self, k: int, step: int, now_s: float,
+                              dep_name: str, decisions: List[str]) -> None:
+        """Free hosts for serving (until k more are free) by shrinking —
+        then evicting — the training jobs with the most deadline slack."""
+        goal = len(self.cluster.free_hosts()) + k
+        while len(self.cluster.free_hosts()) < goal:
+            victims = sorted(
+                (j for j in self.jobs.values() if j.state == "running"),
+                key=lambda j: (-self._slack(j, now_s), j.name))
+            if not victims:
+                return
+            job = victims[0]
+            # never shrink onto an m the model says cannot reach eps: the
+            # job would hold hosts forever making no progress — evict it
+            # (requeue) instead and let admission re-plan
+            lower = [m for m in job.m_options if m < job.m
+                     and job.remaining_s(m) is not None]
+            if lower:
+                target = max(lower)
+                self._execute_resize(job, target, f"serve:{dep_name}",
+                                     decisions)
+                # a forced shrink is still a resize: start its cooldown so
+                # the no-flap guard covers the follow-up grow as well
+                self._last_resize[job.name] = step
+                decisions.append(
+                    f"preempt:{job.name}:m={target}:serve={dep_name}")
+            else:
+                self.cluster.release_all(job.name)
+                self._rollback(job)
+                job.state, job.m = "queued", 0
+                decisions.append(f"evict:{job.name}:serve={dep_name}")
+
+    def _slack(self, job: TrainingJob, now_s: float) -> float:
+        rem = job.remaining_s(job.m) if job.m else job.remaining_s(
+            min(job.m_options))
+        if rem is None:
+            return float("-inf")
+        return (job.deadline_s - now_s) - rem
+
+    # ------------------------------------------------------------------
+    # 3. training admission (NoFeasiblePlan-aware)
+    # ------------------------------------------------------------------
+    def _admit_training(self, step: int, now_s: float,
+                        decisions: List[str]) -> None:
+        pending = sorted(
+            (j for j in self.jobs.values()
+             if j.state in ("pending", "queued") and j.arrival_s <= now_s),
+            key=lambda j: (j.arrival_s, j.name))
+        for job in pending:
+            if job.state == "pending":
+                job.state = "queued"
+                decisions.append(f"queue:{job.name}")
+            plan = job.admission_plan()
+            if isinstance(plan, NoFeasiblePlan):
+                job.state, job.no_plan = "infeasible", plan
+                decisions.append(f"infeasible:{job.name}:{plan.query}")
+                continue
+            slack = job.deadline_s - now_s
+            remaining = {m: (1.0 - job.progress) * t + job.penalty_s
+                         for (_, m), t in sorted(plan.table.items())}
+            feasible = {m: t for m, t in remaining.items() if t <= slack}
+            if not feasible:
+                fastest = min(remaining.values())
+                job.no_plan = NoFeasiblePlan(
+                    query="fleet_admission",
+                    reason=f"fastest remaining {fastest:.0f}s on "
+                           f"m={min(remaining, key=remaining.get)} exceeds "
+                           f"deadline slack {slack:.0f}s",
+                    table={(job.name, m): t for m, t in remaining.items()})
+                job.state = "infeasible"
+                decisions.append(f"infeasible:{job.name}:fleet_admission")
+                continue
+            free = len(self.cluster.free_hosts())
+            affordable = {m: t for m, t in feasible.items() if m <= free}
+            if not affordable:
+                continue   # stays queued; retried next tick
+            target = min(affordable, key=lambda m: (m * affordable[m], m))
+            self.cluster.allocate(job.name, target)
+            job.state, job.m = "running", target
+            job.since_ckpt_s = 0.0
+            if job.executor is not None:
+                job.executor.resize(target)
+                job.executor.checkpoint()
+            self._last_resize[job.name] = step
+            decisions.append(f"admit:{job.name}:m={target}")
+
+    # ------------------------------------------------------------------
+    # 4. training resize (the AdaptiveController tradeoff, fleet-wide)
+    # ------------------------------------------------------------------
+    def _resize_training(self, step: int, now_s: float,
+                         decisions: List[str]) -> None:
+        for name in sorted(self.jobs):
+            job = self.jobs[name]
+            if job.state != "running":
+                continue
+            slack = job.deadline_s - now_s
+            free = len(self.cluster.free_hosts())
+            rem_cur = job.remaining_s(job.m)
+            # rem_cur None = the current m cannot reach eps at all: the
+            # most at-risk state there is (progress is frozen)
+            at_risk = rem_cur is None or rem_cur > slack
+            in_cooldown = (step - self._last_resize.get(name, -10 ** 9)
+                           < self.cfg.resize_cooldown_ticks)
+            if in_cooldown and not at_risk:   # rescues don't wait out no-flap
+                continue
+            candidates: Dict[int, float] = {}
+            for m in job.m_options:
+                if m != job.m and m > job.m + free:
+                    continue
+                rem = job.remaining_s(m)
+                if rem is None:
+                    continue
+                candidates[m] = rem + (self.cfg.reshard_cost_s
+                                       if m != job.m else 0.0)
+            if not candidates:
+                continue
+            # shrinking trades slack for cost; demand a safety margin so a
+            # later deadline rescue (and its reshard cost) never follows
+            meeting = {m: t for m, t in candidates.items()
+                       if t <= (slack * self.cfg.shrink_safety
+                                if m < job.m else slack)}
+            pool = meeting or candidates
+            # minimize host-seconds among deadline-feasible sizes; if none
+            # is feasible, minimize lateness instead (max useful speed)
+            if meeting:
+                target = min(pool, key=lambda m: (m * pool[m], m))
+            else:
+                target = min(pool, key=lambda m: (pool[m], m))
+            if target == job.m:
+                continue
+            deadline_rescue = at_risk and candidates[target] <= slack
+            cheaper = (rem_cur is not None and target * candidates[target]
+                       < self.cfg.resize_hysteresis * job.m * rem_cur)
+            if not (deadline_rescue or cheaper):
+                continue
+            why = "deadline" if deadline_rescue else "cost"
+            self.resize_decisions.append(ResizeDecision(
+                resize=True, target_m=target,
+                reason=f"{job.name}: predicted remaining "
+                       f"{candidates[target]:.0f}s on m={target} vs "
+                       f"{'inf' if rem_cur is None else f'{rem_cur:.0f}s'} "
+                       f"on m={job.m} ({why})",
+                predicted_remaining_current=rem_cur,
+                predicted_remaining_target=candidates[target]))
+            old = job.m
+            self._execute_resize(job, target, why, decisions)
+            self._last_resize[name] = step
+            decisions.append(f"resize:{name}:{old}->{target}:{why}")
+
+    def _execute_resize(self, job: TrainingJob, target: int,
+                        why: str, decisions: List[str]) -> None:
+        if target > job.m:
+            self.cluster.allocate(job.name, target - job.m)
+        else:
+            # BSP runs at the slowest member: a shrink keeps the fastest
+            # hosts or the remaining-time model it was priced with is wrong
+            keep = sorted(self.cluster.owned(job.name),
+                          key=lambda h: (self.cluster.host_multiplier(h), h))
+            self.cluster.release(job.name, keep[target:])
+        job.m = target
+        job.penalty_s += self.cfg.reshard_cost_s
+        if job.executor is not None:
+            # the chaos executor contract: checkpoint, then re-shard onto
+            # the new parallelism (SSPLocalSGD re-partitions; the LM
+            # TrainerExecutor routes through elastic.rescale_training_state)
+            job.executor.checkpoint()
+            job.executor.resize(target)
+
+    # ------------------------------------------------------------------
+    # 5. progress + 6. serve accounting
+    # ------------------------------------------------------------------
+    def _account_training(self, step: int, now_s: float,
+                          decisions: List[str]) -> None:
+        for name in sorted(self.jobs):
+            job = self.jobs[name]
+            if job.state != "running":
+                continue
+            pace = self.cluster.bsp_pace(name)   # >= 1: slowest-host drag
+            work_s = self.cfg.tick_s / pace
+            paid = min(job.penalty_s, work_s)
+            job.penalty_s -= paid
+            work_s -= paid
+            t_full = job.time_to_eps(job.m)
+            if t_full is None:
+                continue
+            job.progress = min(job.progress + work_s / t_full, 1.0)
+            job.since_ckpt_s += self.cfg.tick_s
+            if job.executor is not None:
+                job.objective = float(job.executor.outer_step())
+            if job.progress >= 1.0:
+                job.state = "done"
+                job.finish_s = now_s + self.cfg.tick_s
+                self.cluster.release_all(name)
+                job.m = 0
+                decisions.append(f"complete:{name}")
+            elif job.since_ckpt_s >= job.ckpt_every_s:
+                job.ckpt_progress = job.progress
+                job.since_ckpt_s = 0.0
+                if job.executor is not None:
+                    job.executor.checkpoint()
+
+    def _account_serve(self, step: int,
+                       preempted: Dict[str, List[int]]) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for name in sorted(self.deployments):
+            dep = self.deployments[name]
+            demand = dep.trace.qps_at(step)
+            eff = self.cluster.effective_replicas(
+                name, exclude=preempted.get(name, []))
+            if eff <= 0.0:
+                lat = 4.0 * dep.slo_p95_s   # nothing serving: hard breach
+            else:
+                lat = dep.tick_latency(eff, demand)
+            dep.latencies.append(lat)
+            out[name] = dep.snapshot(demand, lat)
+        return out

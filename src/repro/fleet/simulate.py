@@ -1,0 +1,228 @@
+"""Fleet event loop + the replayable FleetRunLog artifact.
+
+``run_fleet_sim(seed)`` is the canonical entry point (mirrors
+``runtime.chaos.run_chaos_sim``): build the day scenario deterministically
+from one seed, drive ``FleetScheduler`` tick by tick through the chaos
+trace, and emit a ``FleetRunLog`` that serializes to JSON and **replays
+bit-identically** from its embedded trace + meta — same guarantee, and
+the same golden-fixture testing pattern, as the chaos layer.
+
+The canonical 24h scenario (``build_day_scenario``): 288 five-minute
+ticks on 24 hosts; two serving deployments under diurnal/bursty request
+traces (a big midday-peaking "chat" and a smaller evening "search") and
+three training jobs arriving through the day, with seeded chaos
+(stragglers, slowdowns, preemptions, membership churn) layered on top.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.fleet.cluster import FleetCluster
+from repro.fleet.scheduler import FleetConfig, FleetScheduler
+from repro.fleet.workloads import (
+    RequestTrace,
+    ServeDeployment,
+    TrainingJob,
+    serve_capacity_planner,
+    training_model,
+)
+from repro.runtime.chaos import ChaosEvent, ChaosRunLog, ChaosTrace
+
+
+# ---------------------------------------------------------------------------
+# Run log
+# ---------------------------------------------------------------------------
+class FleetRunLog(ChaosRunLog):
+    """ChaosRunLog's trace+rows+meta JSON artifact, with fleet semantics:
+    the signature covers scheduler decisions, allocations, and the modeled
+    serve/training outcomes."""
+
+    def signature(self) -> List[tuple]:
+        """The full sequence in-process replay must reproduce exactly: per
+        tick, every scheduler decision plus the allocation/latency/progress
+        outcome (floats included — same machine, same bits)."""
+        out = []
+        for r in self.rows:
+            serve = tuple((n, s["m"], s["lat_s"])
+                          for n, s in sorted(r["serve"].items()))
+            jobs = tuple((n, s["state"], s["m"], s["prog"])
+                         for n, s in sorted(r["jobs"].items()))
+            out.append((r["step"], tuple(r["decisions"]), serve, jobs,
+                        r["free"], r["cost_hh"]))
+        return out
+
+    def control_signature(self) -> List[tuple]:
+        """The machine-portable slice of the signature: decisions,
+        allocations, and states only — no floats, so it compares exactly
+        against a golden fixture recorded on another machine (modeled
+        quantities are compared to tolerance in tests/test_fleet.py)."""
+        out = []
+        for r in self.rows:
+            serve = tuple((n, s["m"], s["ok"])
+                          for n, s in sorted(r["serve"].items()))
+            jobs = tuple((n, s["state"], s["m"])
+                         for n, s in sorted(r["jobs"].items()))
+            out.append((r["step"], tuple(r["decisions"]), serve, jobs,
+                        r["free"]))
+        return out
+
+    def n_decisions(self) -> int:
+        return sum(len(r["decisions"]) for r in self.rows)
+
+    def decisions(self, prefix: str = "") -> List[Tuple[int, str]]:
+        return [(r["step"], d) for r in self.rows for d in r["decisions"]
+                if d.startswith(prefix)]
+
+    def fleet_cost_host_hours(self) -> float:
+        return self.rows[-1]["cost_hh"] if self.rows else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+class FleetSimulator:
+    """Drives scheduler ticks through a chaos trace; no entropy of its own."""
+
+    def __init__(self, trace: ChaosTrace, jobs, deployments,
+                 cfg: Optional[FleetConfig] = None):
+        self.trace = trace
+        self.cluster = FleetCluster(trace)
+        self.scheduler = FleetScheduler(self.cluster, jobs, deployments, cfg)
+
+    def run(self, steps: Optional[int] = None) -> FleetRunLog:
+        steps = self.trace.steps if steps is None else steps
+        sched = self.scheduler
+        log = FleetRunLog(trace=self.trace, meta={
+            "tick_s": sched.cfg.tick_s, "n_hosts": self.trace.n_hosts})
+        for step in range(steps):
+            events, lost, preempted = self.cluster.advance(step)
+            log.append(**sched.tick(step, events, lost, preempted))
+        log.meta["summary"] = self.summary()
+        return log
+
+    def summary(self) -> Dict[str, Any]:
+        sched = self.scheduler
+        serve = {}
+        for name, dep in sorted(sched.deployments.items()):
+            serve[name] = {
+                "p95_s": round(dep.p95_latency(), 9),
+                "slo_p95_s": dep.slo_p95_s,
+                "slo_met": bool(dep.slo_met()),
+                "final_replicas": dep.replicas,
+            }
+        jobs = {}
+        for name, job in sorted(sched.jobs.items()):
+            jobs[name] = {
+                "state": job.state,
+                "progress": round(job.progress, 9),
+                "finish_s": job.finish_s,
+                "deadline_s": job.deadline_s,
+                "met_deadline": bool(job.state == "done"
+                                     and job.finish_s is not None
+                                     and job.finish_s <= job.deadline_s),
+                "no_plan": (None if job.no_plan is None
+                            else {"query": job.no_plan.query,
+                                  "reason": job.no_plan.reason}),
+            }
+        return {"serve": serve, "jobs": jobs,
+                "cost_host_hours": round(sched.cost_host_s / 3600.0, 6),
+                "n_resize_decisions": len(sched.resize_decisions)}
+
+
+# ---------------------------------------------------------------------------
+# The canonical 24h scenario
+# ---------------------------------------------------------------------------
+DAY_TICKS = 288
+DAY_TICK_S = 300.0
+DAY_HOSTS = 24
+
+
+def build_day_scenario(seed: int, *, ticks: int = DAY_TICKS,
+                       tick_s: float = DAY_TICK_S,
+                       n_hosts: int = DAY_HOSTS,
+                       trace: Optional[ChaosTrace] = None):
+    """(trace, jobs, deployments, cfg) for the canonical diurnal day.
+
+    Deterministic in ``seed``; a recorded trace can be passed back in for
+    replay.  Preemptions are guaranteed: if the seeded draw produced none,
+    one is injected mid-day (the scenario exists to exercise them)."""
+    if trace is None:
+        trace = ChaosTrace.generate(seed, ticks, n_hosts, warmup=12)
+        # the seeded draw rarely preempts *busy* hosts (the allocator hands
+        # out low ids first, the draw is uniform), so the scenario injects
+        # two guaranteed preemptions where the work is: one on an early
+        # serve replica, one on an early training host
+        trace.events.extend([
+            ChaosEvent(step=min(60, ticks - 1), kind="preempt", host=4),
+            ChaosEvent(step=min(200, ticks - 1), kind="preempt", host=1),
+        ])
+        trace.events.sort(key=lambda e: (e.step, e.host, e.kind))
+
+    hour = 3600.0
+    jobs = [
+        # overnight-scale run, arrives early, comfortable deadline
+        TrainingJob(
+            name="job_convex", eps=1e-2, arrival_s=0.5 * hour,
+            deadline_s=20.0 * hour, m_options=(2, 4, 8),
+            model=training_model(compute_s=36.0, rate=3.2e-3),
+            ckpt_every_s=6 * tick_s),
+        # mid-morning arrival, tighter deadline -> wants a bigger m
+        TrainingJob(
+            name="job_lm", eps=1e-2, arrival_s=4.0 * hour,
+            deadline_s=18.0 * hour, m_options=(2, 4, 8),
+            model=training_model(compute_s=52.0, rate=2.6e-3),
+            ckpt_every_s=6 * tick_s),
+        # small afternoon job; fits in the evening trough
+        TrainingJob(
+            name="job_sweep", eps=1e-2, arrival_s=9.0 * hour,
+            deadline_s=23.5 * hour, m_options=(1, 2, 4),
+            model=training_model(compute_s=14.0, rate=6.0e-3),
+            ckpt_every_s=6 * tick_s),
+    ]
+    deployments = [
+        ServeDeployment(
+            name="serve_chat",
+            planner=serve_capacity_planner(dispatch_s=0.018,
+                                           per_seq_s=0.0042,
+                                           log_b_s=0.002),
+            trace=RequestTrace.diurnal(seed * 7919 + 1, ticks, tick_s,
+                                       base_qps=2.0, peak_qps=11.0,
+                                       peak_frac=0.55),
+            slo_p95_s=4.5, gen_tokens=64,
+            batch_grid=(1, 2, 4, 8), replica_options=tuple(range(1, 13))),
+        ServeDeployment(
+            name="serve_search",
+            planner=serve_capacity_planner(dispatch_s=0.012,
+                                           per_seq_s=0.0030,
+                                           log_b_s=0.001),
+            trace=RequestTrace.diurnal(seed * 7919 + 2, ticks, tick_s,
+                                       base_qps=1.0, peak_qps=6.0,
+                                       peak_frac=0.80),
+            slo_p95_s=2.5, gen_tokens=32,
+            batch_grid=(1, 2, 4, 8), replica_options=tuple(range(1, 9))),
+    ]
+    cfg = FleetConfig(tick_s=tick_s)
+    return trace, jobs, deployments, cfg
+
+
+def run_fleet_sim(seed: int, *, ticks: int = DAY_TICKS,
+                  tick_s: float = DAY_TICK_S, n_hosts: int = DAY_HOSTS,
+                  trace: Optional[ChaosTrace] = None) -> FleetRunLog:
+    """One deterministic fleet day; everything derives from ``seed``."""
+    trace, jobs, deployments, cfg = build_day_scenario(
+        seed, ticks=ticks, tick_s=tick_s, n_hosts=n_hosts, trace=trace)
+    # the horizon is the *requested* one, not the trace's: a recorded trace
+    # longer (or shorter) than --ticks must not silently change the run
+    log = FleetSimulator(trace, jobs, deployments, cfg).run(steps=ticks)
+    log.meta.update(seed=seed, ticks=ticks, scenario="day")
+    return log
+
+
+def replay(run_log: FleetRunLog) -> FleetRunLog:
+    """Re-run a recorded fleet day from its embedded trace + meta; the
+    result must match ``run_log.signature()`` exactly."""
+    meta = run_log.meta
+    return run_fleet_sim(int(meta["seed"]), ticks=int(meta["ticks"]),
+                         tick_s=float(meta["tick_s"]),
+                         n_hosts=int(meta["n_hosts"]),
+                         trace=run_log.trace)

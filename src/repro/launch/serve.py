@@ -192,14 +192,15 @@ def main():
         t1, t8 = planner.step_time(1), planner.step_time(8)
         print(f"f(b) step model: t(1)={t1*1e3:.1f} ms  t(8)={t8*1e3:.1f} ms  "
               f"coeffs={planner.step_model.coefficients()}")
-        try:
-            plan = planner.plan(target_p50_s=max(10 * t8 * 8, 1e-3), qps=2.0,
-                                gen_tokens=8, batch_grid=[1, 2, 4, 8],
-                                m_grid=[1, 2, 4, 8, 16])
+        plan = planner.plan(target_p50_s=max(10 * t8 * 8, 1e-3), qps=2.0,
+                            gen_tokens=8, batch_grid=[1, 2, 4, 8],
+                            m_grid=[1, 2, 4, 8, 16])
+        if plan:
             print(f"capacity plan: {plan.algorithm} on m={plan.m} replicas "
                   f"(predicted p50 {plan.predicted_time*1e3:.1f} ms)")
-        except ValueError as e:
-            print(f"capacity plan: no feasible operating point ({e})")
+        else:
+            print(f"capacity plan: no feasible operating point "
+                  f"({plan.reason})")
 
     ok = _verify_prefix_reuse(args.arch, args.smoke, eng, args.seed)
     if not ok:

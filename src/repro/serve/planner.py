@@ -32,9 +32,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.ernest import ErnestModel
-from repro.core.hemingway import PlanDecision
+from repro.core.hemingway import NoFeasiblePlan, PlanDecision, PlanResult
 
 STEP_TERMS: Tuple[str, ...] = ("const", "m", "log_m")
+
+
+def decision_batch(decision: PlanDecision) -> int:
+    """Recover the batch operating point from a capacity ``PlanDecision``.
+
+    Single point of truth for the ``continuous@b<batch>`` algorithm-label
+    format ``plan``/``best_latency_within_fleet`` emit — consumers (the
+    fleet simulator above all) must not parse the label themselves."""
+    return int(decision.algorithm.rsplit("@b", 1)[1])
 
 
 @dataclasses.dataclass
@@ -71,12 +80,14 @@ class CapacityPlanner:
     def step_time(self, batch: int) -> float:
         return float(self.step_model.predict(float(batch), 1.0))
 
-    def tokens_per_s(self, batch: int, m: int = 1) -> float:
-        """Fleet decode throughput at operating point (b, m)."""
+    def tokens_per_s(self, batch: int, m: float = 1) -> float:
+        """Fleet decode throughput at operating point (b, m).  ``m`` may be
+        fractional: the fleet simulator models degraded replicas (stragglers,
+        cluster slowdowns) as an effective replica count."""
         t = self.step_time(batch) + self.fleet_overhead * np.log(m + 1.0)
         return m * batch / t
 
-    def p50_latency_s(self, batch: int, gen_tokens: int, m: int = 1) -> float:
+    def p50_latency_s(self, batch: int, gen_tokens: int, m: float = 1) -> float:
         """Per-request latency to decode ``gen_tokens`` at full batch b."""
         t = self.step_time(batch) + self.fleet_overhead * np.log(m + 1.0)
         return gen_tokens * t
@@ -90,7 +101,7 @@ class CapacityPlanner:
         gen_tokens: int,
         batch_grid: Sequence[int],
         m_grid: Sequence[int],
-    ) -> PlanDecision:
+    ) -> PlanResult:
         """Smallest fleet (m, then b) sustaining ``qps`` requests/s of
         ``gen_tokens``-token responses with p50 <= ``target_p50_s``."""
         table: Dict[Tuple[str, int], float] = {}
@@ -104,7 +115,15 @@ class CapacityPlanner:
                 if feasible and best is None:
                     best = PlanDecision(f"continuous@b{b}", m, predicted_time=lat)
         if best is None:
-            raise ValueError(f"no (m, batch) meets p50<={target_p50_s}s at {qps} qps")
+            return NoFeasiblePlan(
+                query="capacity_plan",
+                reason=(
+                    f"no (m, batch) meets p50<={target_p50_s}s at {qps} qps "
+                    f"(m_grid={sorted(int(x) for x in m_grid)}, "
+                    f"batch_grid={sorted(int(x) for x in batch_grid)})"
+                ),
+                table=table,
+            )
         best.table = table
         return best
 
@@ -115,7 +134,7 @@ class CapacityPlanner:
         qps: float,
         gen_tokens: int,
         batch_grid: Sequence[int],
-    ) -> PlanDecision:
+    ) -> PlanResult:
         """Best-within-budget analogue: lowest p50 a fixed fleet of ``m``
         replicas can offer while still sustaining ``qps``."""
         table: Dict[Tuple[str, int], float] = {}
@@ -129,6 +148,13 @@ class CapacityPlanner:
             if best is None or lat < best.predicted_time:
                 best = PlanDecision(f"continuous@b{b}", m, predicted_time=lat)
         if best is None:
-            raise ValueError(f"fleet of m={m} cannot sustain {qps} qps")
+            return NoFeasiblePlan(
+                query="best_latency_within_fleet",
+                reason=(
+                    f"fleet of m={m} cannot sustain {qps} qps at any "
+                    f"batch in {sorted(int(x) for x in batch_grid)}"
+                ),
+                table=table,
+            )
         best.table = table
         return best

@@ -1,0 +1,33 @@
+"""Regenerate fleet_golden_seed0.json — the golden run log for the
+canonical 24h fleet scenario at seed 0.
+
+The fixture pins the whole adaptive fleet layer: a change to the
+scheduler's admission/preemption/resize policy, the capacity planner, the
+analytic workload models, or the chaos reconciliation shows up as a diff
+in the decision sequence — a deliberate behavior change regenerates the
+fixture with this script, an accidental one fails the golden test.
+
+  PYTHONPATH=src python tests/fixtures/make_fleet_fixture.py
+"""
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent / "fleet_golden_seed0.json"
+
+
+def main():
+    from repro.fleet import replay, run_fleet_sim
+
+    log = run_fleet_sim(0)
+    again = replay(log)
+    assert again.signature() == log.signature(), \
+        "refusing to write a fixture that does not replay bit-identically"
+    summary = log.meta["summary"]
+    assert all(d["slo_met"] for d in summary["serve"].values())
+    assert all(j["state"] in ("done", "infeasible")
+               for j in summary["jobs"].values())
+    log.save(OUT)
+    print(f"{len(log.rows)} ticks, {log.n_decisions()} decisions -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -128,7 +128,10 @@ def test_planner_empty_and_single_point_telemetry():
 def test_planner_non_monotone_telemetry_stays_sane():
     """Step times DECREASING with batch contradict the model family; the
     NNLS fit must still produce positive, finite predictions and the plan
-    queries must either answer or raise ValueError (never nonsense)."""
+    query must either answer or return a typed NoFeasiblePlan (never
+    nonsense)."""
+    from repro.core.hemingway import NoFeasiblePlan
+
     planner = CapacityPlanner()
     for b, t in [(1, 0.09), (2, 0.07), (4, 0.05), (8, 0.04)] * 3:
         planner.observe(b, t)
@@ -136,12 +139,12 @@ def test_planner_non_monotone_telemetry_stays_sane():
     for b in (1, 2, 4, 8, 16):
         t = planner.step_time(b)
         assert np.isfinite(t) and t > 0
-    try:
-        plan = planner.plan(target_p50_s=10.0, qps=1.0, gen_tokens=10,
-                            batch_grid=[1, 2, 4, 8], m_grid=[1, 2, 4])
+    plan = planner.plan(target_p50_s=10.0, qps=1.0, gen_tokens=10,
+                        batch_grid=[1, 2, 4, 8], m_grid=[1, 2, 4])
+    if plan:
         assert plan.m >= 1 and np.isfinite(plan.predicted_time)
-    except ValueError:
-        pass   # an honest refusal is acceptable; garbage is not
+    else:   # an honest typed refusal is acceptable; garbage is not
+        assert isinstance(plan, NoFeasiblePlan) and plan.reason
 
 
 def test_planner_noisy_but_monotone_telemetry():

@@ -80,3 +80,38 @@ def test_one_sided_rows_reported_not_gated(tmp_path, missing_side, capsys):
     cur = write(tmp_path, "cur.json",
                 rows + (extra if missing_side == "current_only" else []))
     assert compare.main([base, cur]) == 0
+
+
+# ------------------------------------------------- newest-baseline resolution
+def test_newest_baseline_prefers_highest_pr_number(tmp_path):
+    write(tmp_path, "BENCH_baseline_pr1.json", BASE)
+    newest = write(tmp_path, "BENCH_pr4.json", BASE)
+    write(tmp_path, "other.json", BASE)          # non-BENCH files ignored
+    assert compare.newest_baseline(str(tmp_path)) == newest
+
+
+def test_newest_baseline_mtime_breaks_number_tie(tmp_path):
+    import os
+
+    a = write(tmp_path, "BENCH_quick.json", BASE)     # no number: pr = -1
+    b = write(tmp_path, "BENCH_full.json", BASE)
+    os.utime(a, (1_000_000_000, 1_000_000_000))
+    os.utime(b, (2_000_000_000, 2_000_000_000))
+    assert compare.newest_baseline(str(tmp_path)) == b
+
+
+def test_directory_baseline_resolves_and_gates(tmp_path, capsys):
+    write(tmp_path, "BENCH_baseline_pr1.json",
+          [("core/lasso_cv", 10_000.0)])               # old, loose baseline
+    write(tmp_path, "BENCH_pr4.json", [("core/lasso_cv", 50_000.0)])
+    cur = write(tmp_path, "cur.json", [("core/lasso_cv", 90_000.0)])
+    # 1.8x vs the pr4 baseline (9x vs pr1 would have failed): newest wins
+    assert compare.main([str(tmp_path), cur]) == 0
+    assert "BENCH_pr4.json" in capsys.readouterr().out
+
+
+def test_exit_2_when_directory_has_no_baselines(tmp_path):
+    cur = write(tmp_path, "cur.json", BASE)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert compare.main([str(empty), cur]) == 2

@@ -10,7 +10,7 @@ from repro.core import (
     ErnestModel,
     Planner,
 )
-from repro.core.hemingway import PlanDecision
+from repro.core.hemingway import NoFeasiblePlan, PlanDecision
 
 P_STAR = 0.25
 MS = (1, 2, 4, 8)
@@ -67,11 +67,29 @@ def test_fastest_to_epsilon_table_is_consistent(planner):
                 assert (name, m) in d.table
 
 
-def test_fastest_to_epsilon_no_feasible_raises():
+def test_fastest_to_epsilon_no_feasible_returns_typed_result():
     # gap can never get below gap0*exp(-rate*max_iters/m); ask for far less
     tight = Planner({"only": _combined(2.0, 1e-6, 1e-3, max_iters=100)})
-    with pytest.raises(ValueError, match="no \\(algorithm, m\\) reaches"):
-        tight.fastest_to_epsilon(1e-12, m_grid=MS)
+    plan = tight.fastest_to_epsilon(1e-12, m_grid=MS)
+    assert isinstance(plan, NoFeasiblePlan)
+    assert not plan                       # falsy: `if plan:` means feasible
+    assert plan.query == "fastest_to_epsilon"
+    assert "eps=1e-12" in plan.reason
+    assert plan.table == {}               # nothing converged -> empty table
+
+
+def test_no_feasible_plan_carries_partial_table():
+    """One algorithm converges, the target is still unreachable for the
+    other: a feasible decision is returned and only converging entries
+    appear in the table (partial predictions are data, not errors)."""
+    mixed = Planner({
+        "reaches": _combined(2.0, 0.50, 5e-3),
+        "never": _combined(2.0, 1e-6, 1e-3, max_iters=100),
+    })
+    d = mixed.fastest_to_epsilon(1e-3, m_grid=MS)
+    assert isinstance(d, PlanDecision)
+    assert d.algorithm == "reaches"
+    assert all(name == "reaches" for name, _ in d.table)
 
 
 def test_best_within_budget_full_table_and_argmin(planner):

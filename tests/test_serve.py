@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.hemingway import NoFeasiblePlan
 from repro.serve import CapacityPlanner, OutOfPages, PagePool, ServeEngine
 from repro.serve.paging import SCRATCH_PAGE
 
@@ -241,9 +242,16 @@ def test_capacity_planner_fit_query_roundtrip():
         m=4, qps=10.0, gen_tokens=10, batch_grid=[1, 2, 4, 8])
     assert best.predicted_time == pytest.approx(10 * (a + c * 1), rel=0.05)
 
-    with pytest.raises(ValueError):
-        planner.plan(target_p50_s=1e-6, qps=40.0, gen_tokens=10,
-                     batch_grid=[1, 2], m_grid=[1])
+    no_plan = planner.plan(target_p50_s=1e-6, qps=40.0, gen_tokens=10,
+                           batch_grid=[1, 2], m_grid=[1])
+    assert isinstance(no_plan, NoFeasiblePlan) and not no_plan
+    assert no_plan.query == "capacity_plan"
+    assert no_plan.table, "infeasible result still carries its predictions"
+
+    no_fleet = planner.best_latency_within_fleet(
+        m=1, qps=1e6, gen_tokens=10, batch_grid=[1, 2])
+    assert isinstance(no_fleet, NoFeasiblePlan)
+    assert "cannot sustain" in no_fleet.reason
 
 
 def test_capacity_planner_from_engine_telemetry():
