@@ -23,8 +23,9 @@ Which rows are compared ("pure-python" rows): CI runners have noisy clocks
 and no accelerator, so only rows whose cost is dominated by Python/numpy/JAX
 CPU work are gated —
 
-* rows under ``kernels/`` (Pallas interpret-mode microbenches) and
-  ``roofline/`` (dry-run artifact summaries, absent in CI) are excluded;
+* rows under ``kernels/`` and ``tune/`` (Pallas interpret-mode / CPU-proxy
+  kernel microbenches) and ``roofline/`` (dry-run artifact summaries,
+  absent in CI) are excluded;
 * rows with a baseline ``us_per_call`` below ``--min-us`` are excluded: the
   harness reuses that column for derived non-time metrics (counts, ids) and
   sub-millisecond timings are below the shared-runner noise floor;
@@ -43,7 +44,7 @@ import os
 import re
 import sys
 
-EXCLUDED_PREFIXES = ("kernels/", "roofline/")
+EXCLUDED_PREFIXES = ("kernels/", "roofline/", "tune/")
 
 
 def newest_baseline(directory: str) -> str:

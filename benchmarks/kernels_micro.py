@@ -3,22 +3,19 @@ correctness deltas; the Pallas kernels target TPU, so us_per_call here is a
 CPU proxy, not a TPU number)."""
 from __future__ import annotations
 
-import time
+import functools
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
+# the tuner's timer: one warmup invocation, then the timed mean.  (The old
+# local _time called fn(*args) twice during warmup — the isinstance ternary
+# evaluated it once per branch check — inflating warmup cost and, for
+# stateful/donating callables, skewing the first timed call.)
+from repro.kernels.tune.sweep import time_fn as _time
+
 Row = Tuple[str, float, str]
-
-
-def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def bench_kernels() -> List[Row]:
@@ -75,4 +72,62 @@ def bench_kernels() -> List[Row]:
     t_sdca = _time(sdca, X, yv, a0, w0, idx)
     rows.append(("kernels/sdca_8x512", t_sdca,
                  f"updates_per_s={m * nl / (t_sdca / 1e6):.0f}"))
+    return rows
+
+
+def bench_paged_decode() -> List[Row]:
+    """Paged-native decode vs the legacy gather path at serving scale, plus
+    the autotuner rows that picked the native blocking.
+
+    Cache capacity is 2048 positions (B=4); fills are the tuner's ragged
+    serving profile (longest sequence at half capacity).  The gather path
+    pays the O(B*Hk*S*d) page gather plus O(capacity) attention every
+    step; the paged-native stream path reads pages in place and stops at
+    the longest live sequence.  Both run the same blocked online softmax,
+    so outputs are bit-identical (max_err in the derived column is exact
+    0).  us_per_call here is a CPU proxy; on TPU `impl="pallas"` runs the
+    Pallas kernel from the same dispatcher.
+    """
+    import numpy as np
+
+    from repro.kernels.flash_decode.ops import paged_decode_attention
+    from repro.kernels.tune import ConfigCache, bench_rows, ensure
+
+    b, hk, g, d, page = 4, 4, 2, 64, 16
+    npp = 2048 // page
+    shape = {"b": b, "hk": hk, "g": g, "d": d, "page": page, "npp": npp}
+    cache = ConfigCache(path=None)  # in-memory: the bench is self-contained
+    cfg = ensure("flash_decode_paged", shape, jnp.float32, cache=cache)
+    ppp = cfg["pages_per_program"]
+
+    from repro.kernels.tune import ragged_lengths
+
+    n_pages = b * npp + 1
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, hk * g, d), jnp.float32)
+    kp = jnp.asarray(rng.randn(n_pages, hk, page, d), jnp.float32)
+    vp = jnp.asarray(rng.randn(n_pages, hk, page, d), jnp.float32)
+    pt = jnp.asarray(np.stack([
+        rng.choice(n_pages - 1, npp, replace=False) + 1 for _ in range(b)
+    ]), jnp.int32)
+    lens = jnp.asarray(ragged_lengths(b, npp * page))
+
+    def run(impl):
+        return jax.jit(functools.partial(
+            paged_decode_attention, impl=impl, pages_per_program=ppp))
+
+    native, gather = run("stream"), run("gather")
+    t_native = _time(native, q, kp, vp, lens, pt)
+    t_gather = _time(gather, q, kp, vp, lens, pt)
+    err = float(jnp.abs(native(q, kp, vp, lens, pt)
+                        - gather(q, kp, vp, lens, pt)).max())
+    sig = f"b{b}_s{npp * page}"
+    rows: List[Row] = [
+        (f"serve/decode_paged_native_{sig}", t_native,
+         f"ppp={ppp};speedup_vs_gather={t_gather / t_native:.2f}x;"
+         f"max_err={err:.1e}"),
+        (f"serve/decode_paged_gather_{sig}", t_gather,
+         f"ppp={ppp};copies=O(B*Hk*S*d)"),
+    ]
+    rows.extend(bench_rows(cache))
     return rows

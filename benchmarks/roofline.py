@@ -3,7 +3,13 @@
 Per (arch x shape x mesh): the three roofline terms, the dominant one,
 MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and bytes/device.
 
+With ``--tune-cache`` it also prints a per-kernel table from the
+autotuner's config cache — measured us vs the same light-speed model the
+tuner pruned candidates with (``repro.kernels.tune.roofline``), so whole-
+program and per-kernel rooflines read off one module.
+
 Run:  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+          [--tune-cache results/tune_cache.json]
 """
 from __future__ import annotations
 
@@ -44,10 +50,33 @@ def roofline_fraction(r: Dict) -> float:
     return ideal / t_step if t_step > 0 else 0.0
 
 
+def tune_cache_table(path: str) -> List[str]:
+    """Per-kernel measured-vs-light-speed lines from an autotuner cache."""
+    from repro.kernels.tune import ConfigCache
+    from repro.kernels.tune.roofline import estimate, light_speed_s
+
+    cache = ConfigCache(path)
+    lines = ["| family | shape | config | measured (us) | light-speed (us) "
+             "| x |", "|---|---|---|---|---|---|"]
+    for key in sorted(cache.entries):
+        e = cache.entries[key]
+        est = estimate(e["family"], e["shape"], e["config"])
+        floor_us = light_speed_s(est.flops, est.bytes_moved) * 1e6
+        cfg = ";".join(f"{k}={v}" for k, v in sorted(e["config"].items()))
+        ratio = e["us_per_call"] / floor_us if floor_us else 0.0
+        lines.append(
+            f"| {e['family']:18s} | {key.split('|', 2)[1]:28s} | {cfg:20s} "
+            f"| {e['us_per_call']:10.1f} | {floor_us:10.3f} "
+            f"| {ratio:8.0f} |")
+    return lines
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="also print the per-kernel autotuner table")
     args = ap.parse_args()
     rows = load_results(args.dir, args.mesh)
     print(HEADER)
@@ -63,6 +92,10 @@ def main():
                         r["arch"], r["shape"]) for r in rows), reverse=True)
         print(f"# most collective-bound: {coll[0][1]} {coll[0][2]} "
               f"(coll share {coll[0][0]:.2f})")
+    if args.tune_cache:
+        print()
+        for line in tune_cache_table(args.tune_cache):
+            print(line)
 
 
 if __name__ == "__main__":

@@ -54,11 +54,18 @@ def main() -> None:
             print(f"# {fn.__name__} done in {time.time() - t0:.0f}s",
                   file=sys.stderr, flush=True)
 
-    from benchmarks.kernels_micro import bench_kernels
+    from benchmarks.kernels_micro import bench_kernels, bench_paged_decode
     try:
         rows.extend(bench_kernels())
     except Exception as e:  # noqa: BLE001
         rows.append(("kernels/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
+    # paged-native vs gather decode + the autotuner rows that blocked it
+    try:
+        rows.extend(bench_paged_decode())
+    except Exception as e:  # noqa: BLE001
+        rows.append(("serve/decode_paged/ERROR", 0.0,
+                     f"{type(e).__name__}:{e}"))
 
     try:
         from benchmarks.fleet import bench_fleet

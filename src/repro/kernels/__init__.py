@@ -9,6 +9,5 @@ def tpu_compiler_params(**kwargs):
     construct whichever this jax ships."""
     from jax.experimental.pallas import tpu as pltpu
 
-    cls = getattr(pltpu, "CompilerParams", None) \
-        or getattr(pltpu, "TPUCompilerParams")
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
     return cls(**kwargs)

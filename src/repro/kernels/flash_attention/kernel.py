@@ -12,6 +12,7 @@ the ops wrapper (`flash_attention_pallas`), keeping this kernel MHA-shaped.
 Causally-masked blocks are predicated off with pl.when (on TPU these tiles
 are skipped by the scalar unit before any VMEM traffic is issued).
 """
+
 from __future__ import annotations
 
 import functools
@@ -27,12 +28,28 @@ from repro.kernels import tpu_compiler_params
 
 NEG_INF = -1e30
 
+# dot_general dimension_numbers: q @ k^T (contract last axes) / p @ v
+_DOT_QK = (((1,), (1,)), ((), ()))
+_DOT_PV = (((1,), (0,)), ((), ()))
 
-def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,  # blocked refs
-                      acc_ref, m_ref, l_ref,        # VMEM scratch
-                      *, sm_scale: float, causal: bool,
-                      block_q: int, block_k: int, n_kv: int, sq: int,
-                      skv: int):
+
+def _flash_fwd_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,  # blocked refs
+    acc_ref,
+    m_ref,
+    l_ref,  # VMEM scratch
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+    sq: int,
+    skv: int,
+):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -44,16 +61,14 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,  # blocked refs
 
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     k_pos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    needed = jnp.logical_or(not causal,
-                            jk * block_k <= iq * block_q + block_q - 1)
+    needed = jnp.logical_or(not causal, jk * block_k <= iq * block_q + block_q - 1)
 
     @pl.when(needed)
     def _compute():
-        q = q_ref[0].astype(jnp.float32)   # (bq, d)
-        k = k_ref[0].astype(jnp.float32)   # (bk, d)
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
         v = v_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * sm_scale
+        s = jax.lax.dot_general(q, k, _DOT_QK, preferred_element_type=jnp.float32) * sm_scale
         mask = k_pos < skv  # kv padding
         if causal:
             mask = jnp.logical_and(mask, q_pos >= k_pos)
@@ -64,8 +79,8 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,  # blocked refs
         p = jnp.exp(s - m_new[:, None])
         p = jnp.where(mask, p, 0.0)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        pv = jax.lax.dot_general(p, v, _DOT_PV, preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
         m_ref[...] = m_new
 
     @pl.when(jk == n_kv - 1)
@@ -98,8 +113,15 @@ def flash_attention_fwd_pallas(
     nq = qp.shape[1] // block_q
     nk = kp.shape[1] // block_k
     kernel = functools.partial(
-        _flash_fwd_kernel, sm_scale=scale, causal=causal,
-        block_q=block_q, block_k=block_k, n_kv=nk, sq=sq, skv=skv)
+        _flash_fwd_kernel,
+        sm_scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv=nk,
+        sq=sq,
+        skv=skv,
+    )
     out = pl.pallas_call(
         kernel,
         grid=(bh, nq, nk),
@@ -116,7 +138,8 @@ def flash_attention_fwd_pallas(
             pltpu.VMEM((block_q,), jnp.float32),
         ],
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
         interpret=interpret,
     )(qp, kp, vp)
     return out[:, :sq]
@@ -141,7 +164,13 @@ def flash_attention_pallas(
         k = jnp.repeat(k, g, axis=1)
         v = jnp.repeat(v, g, axis=1)
     out = flash_attention_fwd_pallas(
-        q.reshape(b * hq, sq, d), k.reshape(b * hq, -1, d),
-        v.reshape(b * hq, -1, d), causal=causal, sm_scale=sm_scale,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        q.reshape(b * hq, sq, d),
+        k.reshape(b * hq, -1, d),
+        v.reshape(b * hq, -1, d),
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
     return out.reshape(b, hq, sq, d)

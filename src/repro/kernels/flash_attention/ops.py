@@ -11,6 +11,7 @@ VMEM BlockSpecs; tests assert both against ref.py.
 GQA layout: q (B, Hq, Sq, D), kv (B, Hk, Skv, D) with Hq % Hk == 0; scores are
 computed grouped as (B, Hk, G, ...) so KV is never repeated in memory.
 """
+
 from __future__ import annotations
 
 import functools
@@ -42,18 +43,15 @@ def _blk(x: jnp.ndarray, axis: int, i, size: int) -> jnp.ndarray:
     return lax.dynamic_slice(x, starts, sizes)
 
 
-@functools.partial(
-    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
-)
-def _flash(q, k, v, kv_lens, causal: bool, sm_scale: float, q_offset: int,
-           block_q: int, block_k: int):
-    out, _ = _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
-                             block_q, block_k)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash(
+    q, k, v, kv_lens, causal: bool, sm_scale: float, q_offset: int, block_q: int, block_k: int
+):
+    out, _ = _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset, block_q, block_k)
     return out
 
 
-def _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
-                    block_q, block_k):
+def _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset, block_q, block_k):
     b, hk, g, sq, d = q.shape
     skv = k.shape[2]
     dv = v.shape[3]
@@ -82,8 +80,8 @@ def _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
             acc, m, l = carry
             kj = _blk(kp, 2, j, block_k).astype(jnp.float32)  # (B,K,bk,D)
             vj = _blk(vp, 2, j, block_k).astype(jnp.float32)
-            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj,
-                           preferred_element_type=jnp.float32) * sm_scale
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj, preferred_element_type=jnp.float32)
+            s = s * sm_scale
             kpos = j * block_k + kv_pos  # (bk,)
             valid = kpos[None, :] < lens[:, None]  # (B, bk)
             mask = valid[:, None, None, None, :]
@@ -96,9 +94,8 @@ def _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
             p = jnp.exp(s - m_new[..., None])
             p = jnp.where(mask, p, 0.0)
             l_new = l * alpha + p.sum(axis=-1)
-            acc_new = acc * alpha[..., None] + jnp.einsum(
-                "bkgqs,bksd->bkgqd", p, vj,
-                preferred_element_type=jnp.float32)
+            pv = jnp.einsum("bkgqs,bksd->bkgqd", p, vj, preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
             return acc_new, m_new, l_new
 
         acc, m, l = lax.fori_loop(0, hi, kv_step, (acc0, m0, l0))
@@ -106,8 +103,7 @@ def _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
         lse_i = m + jnp.log(jnp.maximum(l, 1e-30))
         return None, (out_i.astype(q.dtype), lse_i)
 
-    _, (out_blocks, lse_blocks) = lax.scan(q_step, None,
-                                           jnp.arange(nq, dtype=jnp.int32))
+    _, (out_blocks, lse_blocks) = lax.scan(q_step, None, jnp.arange(nq, dtype=jnp.int32))
     # (nq, B, K, G, bq, Dv) -> (B, K, G, Sq, Dv)
     out = jnp.moveaxis(out_blocks, 0, 3).reshape(b, hk, g, nq * block_q, dv)
     lse = jnp.moveaxis(lse_blocks, 0, 3).reshape(b, hk, g, nq * block_q)
@@ -115,8 +111,7 @@ def _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
 
 
 def _flash_fwd(q, k, v, kv_lens, causal, sm_scale, q_offset, block_q, block_k):
-    out, lse = _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset,
-                               block_q, block_k)
+    out, lse = _flash_fwd_impl(q, k, v, kv_lens, causal, sm_scale, q_offset, block_q, block_k)
     return out, (q, k, v, kv_lens, out, lse)
 
 
@@ -140,8 +135,8 @@ def _flash_bwd(causal, sm_scale, q_offset, block_q, block_k, res, dout):
     lens = jnp.minimum(kv_lens.astype(jnp.int32), skv)
 
     def s_block(qi, kj, i, j):
-        s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj,
-                       preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj, preferred_element_type=jnp.float32)
+        s = s * sm_scale
         kpos = j * block_k + kv_pos
         valid = kpos[None, :] < lens[:, None]
         mask = valid[:, None, None, None, :]
@@ -164,14 +159,12 @@ def _flash_bwd(causal, sm_scale, q_offset, block_q, block_k, res, dout):
             s, mask = s_block(qi, kj, i, j)
             p = jnp.exp(s - lsei[..., None])
             p = jnp.where(mask, p, 0.0)
-            dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vj,
-                            preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vj, preferred_element_type=jnp.float32)
             ds = p * (dp - dli[..., None])
-            return dqi + jnp.einsum("bkgqs,bksd->bkgqd", ds, kj,
-                                    preferred_element_type=jnp.float32) * sm_scale
+            dsk = jnp.einsum("bkgqs,bksd->bkgqd", ds, kj, preferred_element_type=jnp.float32)
+            return dqi + dsk * sm_scale
 
-        dqi = lax.fori_loop(0, hi,
-                            kv_step, jnp.zeros_like(qi))
+        dqi = lax.fori_loop(0, hi, kv_step, jnp.zeros_like(qi))
         return None, dqi
 
     _, dq_blocks = lax.scan(dq_step, None, jnp.arange(nq, dtype=jnp.int32))
@@ -193,23 +186,22 @@ def _flash_bwd(causal, sm_scale, q_offset, block_q, block_k, res, dout):
             s, mask = s_block(qi, kj, i, j)
             p = jnp.exp(s - lsei[..., None])
             p = jnp.where(mask, p, 0.0)
-            dvj = dvj + jnp.einsum("bkgqs,bkgqd->bksd", p, doi,
-                                   preferred_element_type=jnp.float32)
-            dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vj,
-                            preferred_element_type=jnp.float32)
+            pdo = jnp.einsum("bkgqs,bkgqd->bksd", p, doi, preferred_element_type=jnp.float32)
+            dvj = dvj + pdo
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vj, preferred_element_type=jnp.float32)
             ds = p * (dp - dli[..., None])
-            dkj = dkj + jnp.einsum("bkgqs,bkgqd->bksd", ds, qi,
-                                   preferred_element_type=jnp.float32) * sm_scale
+            dsq = jnp.einsum("bkgqs,bkgqd->bksd", ds, qi, preferred_element_type=jnp.float32)
+            dkj = dkj + dsq * sm_scale
             return dkj, dvj
 
-        dkj, dvj = lax.fori_loop(
-            lo, nq, q_step,
-            (jnp.zeros((b, hk, block_k, d), jnp.float32),
-             jnp.zeros((b, hk, block_k, dv_dim), jnp.float32)))
+        init = (
+            jnp.zeros((b, hk, block_k, d), jnp.float32),
+            jnp.zeros((b, hk, block_k, dv_dim), jnp.float32),
+        )
+        dkj, dvj = lax.fori_loop(lo, nq, q_step, init)
         return None, (dkj, dvj)
 
-    _, (dk_blocks, dv_blocks) = lax.scan(dkv_step, None,
-                                         jnp.arange(nk, dtype=jnp.int32))
+    _, (dk_blocks, dv_blocks) = lax.scan(dkv_step, None, jnp.arange(nk, dtype=jnp.int32))
     dk = jnp.moveaxis(dk_blocks, 0, 2).reshape(b, hk, nk * block_k, d)
     dv = jnp.moveaxis(dv_blocks, 0, 2).reshape(b, hk, nk * block_k, dv_dim)
     dk = dk[:, :, :skv].astype(k.dtype)
@@ -239,19 +231,19 @@ def flash_attention(
     if hq % hk:
         raise ValueError(f"Hq={hq} not a multiple of Hk={hk}")
     g = hq // hk
-    scale = float(sm_scale) if sm_scale is not None else 1.0 / (d ** 0.5)
+    scale = float(sm_scale) if sm_scale is not None else 1.0 / (d**0.5)
     block_q = min(block_q, max(sq, 16))
     block_k = min(block_k, max(skv, 16))
     if kv_lens is None:
         kv_lens = jnp.full((b,), float(skv), jnp.float32)
     q5 = q.reshape(b, hk, g, sq, d)
-    out = _flash(q5, k, v, kv_lens.astype(jnp.float32), causal, scale,
-                 int(q_offset), int(block_q), int(block_k))
+    lens32 = kv_lens.astype(jnp.float32)
+    out = _flash(q5, k, v, lens32, causal, scale, int(q_offset), int(block_q), int(block_k))
     return out.reshape(b, hq, sq, v.shape[3])
 
 
 def decode_attention(
-    q: jnp.ndarray,        # (B, Hq, D) single new token per sequence
+    q: jnp.ndarray,  # (B, Hq, D) single new token per sequence
     k_cache: jnp.ndarray,  # (B, Hk, S, D)
     v_cache: jnp.ndarray,  # (B, Hk, S, D)
     lengths: jnp.ndarray,  # (B,) int32 — number of valid cache positions
@@ -267,20 +259,20 @@ def decode_attention(
     b, hq, d = q.shape
     _, hk, s, _ = k_cache.shape
     g = hq // hk
-    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    scale = sm_scale if sm_scale is not None else 1.0 / (d**0.5)
     # keep caches in their storage dtype (bf16): fp32-casting a 500k-token
     # cache would double its HBM traffic; the MXU accumulates in fp32 via
     # preferred_element_type
     qf = q.reshape(b, hk, g, d)
-    scores = jnp.einsum("bkgd,bksd->bkgs", qf, k_cache,
-                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.einsum("bkgd,bksd->bkgs", qf, k_cache, preferred_element_type=jnp.float32)
+    scores = scores * scale
     pos = jnp.arange(s, dtype=jnp.int32)
     mask = pos[None, :] < lengths[:, None]  # (B, S)
     scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     m = scores.max(axis=-1, keepdims=True)
     p = jnp.exp(scores - m)
     l = p.sum(axis=-1, keepdims=True)
-    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
+    pv = p.astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", pv, v_cache, preferred_element_type=jnp.float32)
     out = out / jnp.maximum(l, 1e-30)
     return out.reshape(b, hq, v_cache.shape[-1]).astype(q.dtype)

@@ -2,6 +2,7 @@
 
 Only used by tests/benchmarks on small shapes.
 """
+
 from __future__ import annotations
 
 from typing import Optional
@@ -23,7 +24,7 @@ def attention_ref(
     _, hk, skv, _ = k.shape
     assert hq % hk == 0
     g = hq // hk
-    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    scale = sm_scale if sm_scale is not None else 1.0 / (d**0.5)
     qf = q.astype(jnp.float32).reshape(b, hk, g, sq, d)
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)

@@ -1,12 +1,27 @@
-"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+"""Pallas TPU flash-decode kernels: one query token vs a long KV cache.
 
-Grid = (B*H, n_kv_blocks); KV blocks stream through VMEM while the
-(head_dim,) fp32 accumulator + scalar running max/sum persist in scratch.
-Per-sequence valid lengths mask the tail block.  This is the single-chip
-building block; cross-chip KV-sequence sharding composes the per-shard
-(acc, m, l) partials with a psum (see ops.sharded_decode_attention and the
-GSPMD path in kernels/flash_attention/ops.decode_attention).
+Two kernels:
+
+* ``flash_decode_pallas`` — contiguous cache.  Grid = (B*H, n_kv_blocks);
+  KV blocks stream through VMEM while the (head_dim,) fp32 accumulator +
+  scalar running max/sum persist in scratch.  Per-sequence valid lengths
+  mask the tail block.
+* ``paged_flash_decode_pallas`` — paged cache.  The KV pool stays put in
+  HBM ((n_pages, Hk, page, d)); the per-sequence page table and valid
+  lengths ride in as scalar-prefetch operands, and the grid iterates
+  (B, Hk, page groups).  Each program resolves its logical pages to
+  physical pages through the prefetched table and streams them through
+  VMEM — the (B, Hk, P*page, d) gather the jnp fallback materializes
+  never exists.  Groups entirely past a sequence's valid length are
+  predicated off with ``pl.when`` (skipped by the scalar unit on TPU).
+  An optional rotary/PE operand pair (q_pe, kpe pool) serves the MLA
+  latent path: scores = q_lat*ckv + q_pe*kpe, context in latent space.
+
+Both compose with cross-chip KV sharding via psum of (acc, m, l) partials
+(see ops.sharded_decode_attention and the GSPMD path in
+kernels/flash_attention/ops.decode_attention).
 """
+
 from __future__ import annotations
 
 import functools
@@ -22,10 +37,26 @@ from repro.kernels import tpu_compiler_params
 
 NEG_INF = -1e30
 
+# dot_general dimension_numbers: contract the last axis of both operands
+# (scores: q @ k^T) / contract q's last with v's first (context: p @ v)
+_DOT_QK = (((1,), (1,)), ((), ()))
+_DOT_PV = (((1,), (0,)), ((), ()))
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref,
-                   *, sm_scale: float, block_k: int, n_kv: int):
+
+def _decode_kernel(
+    len_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    block_k: int,
+    n_kv: int,
+):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -34,11 +65,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(jnp.float32)          # (1, d)
-    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    q = q_ref[0].astype(jnp.float32)  # (1, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
     v = v_ref[0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)[0] * sm_scale
+    s = jax.lax.dot_general(q, k, _DOT_QK, preferred_element_type=jnp.float32)[0] * sm_scale
     pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
     valid = pos < len_ref[0]
     s = jnp.where(valid, s, NEG_INF)
@@ -47,19 +77,17 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     l_ref[0] = l_ref[0] * alpha + p.sum()
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p[None], v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    pv = jax.lax.dot_general(p[None], v, _DOT_PV, preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
     m_ref[0] = m_new
 
     @pl.when(j == n_kv - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
-                       )[0].astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30))[0].astype(o_ref.dtype)
 
 
 def flash_decode_pallas(
-    q: jnp.ndarray,        # (B, H, D)
+    q: jnp.ndarray,  # (B, H, D)
     k_cache: jnp.ndarray,  # (B, H, S, D) (GQA: broadcast KV heads first)
     v_cache: jnp.ndarray,  # (B, H, S, D)
     lengths: jnp.ndarray,  # (B,) int32
@@ -80,14 +108,12 @@ def flash_decode_pallas(
     kf = k_cache.reshape(b * h, -1, d)
     vf = v_cache.reshape(b * h, -1, d)
     lens = jnp.repeat(lengths.astype(jnp.int32), h)  # (B*H,)
-    kernel = functools.partial(_decode_kernel, sm_scale=scale,
-                               block_k=block_k, n_kv=nk)
+    kernel = functools.partial(_decode_kernel, sm_scale=scale, block_k=block_k, n_kv=nk)
     out = pl.pallas_call(
         kernel,
         grid=(b * h, nk),
         in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (i,),
-                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
@@ -99,8 +125,157 @@ def flash_decode_pallas(
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qf, kf, vf)
     return out.reshape(b, h, d)
+
+
+def _paged_decode_kernel(
+    *refs,
+    sm_scale: float,
+    page_size: int,
+    pages_per_program: int,
+    n_groups: int,
+    has_pe: bool,
+):
+    """One (batch row, kv head, page group) program of paged flash decode.
+
+    ``refs`` layout (scalar-prefetch first, then operands, then scratch):
+      pt_ref   (B, n_pp_padded) int32 SMEM — logical -> physical page ids
+      len_ref  (B,) int32 SMEM          — valid positions incl. new token
+      q_ref    (1, 1, G, dk) VMEM block
+      [qpe_ref (1, 1, G, dr) VMEM block]           (has_pe)
+      k_ref    (n_pages, Hk, page, dk) ANY — whole pool, loaded per page
+      [kpe_ref (n_pages, Hk, page, dr) ANY]        (has_pe)
+      v_ref    (n_pages, Hk, page, dv) ANY
+      o_ref    (1, 1, G, dv) VMEM block
+      acc_ref (G, dv) f32, m_ref (G,) f32, l_ref (G,) f32 scratch.
+    """
+    if has_pe:
+        (pt_ref, len_ref, q_ref, qpe_ref, k_ref, kpe_ref, v_ref, o_ref) = refs[:8]
+        acc_ref, m_ref, l_ref = refs[8:]
+    else:
+        (pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref) = refs[:6]
+        acc_ref, m_ref, l_ref = refs[6:]
+        qpe_ref = kpe_ref = None
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    grp = pl.program_id(2)
+
+    @pl.when(grp == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    blk = pages_per_program * page_size
+    start = grp * blk
+
+    @pl.when(start < length)
+    def _compute():
+        def load_pages(ref):
+            # resolve + stream this group's pages; python loop is static
+            # (pages_per_program), each load is one page's (page, d) tile
+            tiles = []
+            for i in range(pages_per_program):
+                pid = pt_ref[b, grp * pages_per_program + i]
+                idx = (pl.dslice(pid, 1), pl.dslice(h, 1), slice(None), slice(None))
+                tiles.append(pl.load(ref, idx)[0, 0])
+            return jnp.concatenate(tiles, axis=0).astype(jnp.float32)
+
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, dk)
+        k = load_pages(k_ref)  # (blk, dk)
+        v = load_pages(v_ref)  # (blk, dv)
+        s = jax.lax.dot_general(q, k, _DOT_QK, preferred_element_type=jnp.float32)
+        if has_pe:
+            qpe = qpe_ref[0, 0].astype(jnp.float32)  # (G, dr)
+            kpe = load_pages(kpe_ref)  # (blk, dr)
+            s = s + jax.lax.dot_general(qpe, kpe, _DOT_QK, preferred_element_type=jnp.float32)
+        s = s * sm_scale  # (G, blk)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (blk,), 0)
+        valid = (pos < length)[None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v, _DOT_PV, preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(grp == n_groups - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_flash_decode_pallas(
+    q: jnp.ndarray,  # (B, Hk, G, dk)
+    k_pages: jnp.ndarray,  # (n_pages, Hk, page, dk) physical pool
+    v_pages: jnp.ndarray,  # (n_pages, Hk, page, dv)
+    lengths: jnp.ndarray,  # (B,) int32 valid positions incl. new token
+    page_tables: jnp.ndarray,  # (B, pages_per_seq) int32 physical page ids
+    *,
+    q_pe: Optional[jnp.ndarray] = None,  # (B, Hk, G, dr)
+    kpe_pages: Optional[jnp.ndarray] = None,  # (n_pages, Hk, page, dr)
+    sm_scale: Optional[float] = None,
+    pages_per_program: int = 4,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Paged-native flash decode: the pool is read in place (zero copy).
+
+    Returns (B, Hk, G, dv).  Shares its blocking (``pages_per_program``
+    pages = one score block) and float associativity with the jnp
+    ``stream``/``gather`` implementations in ops.py; interpret mode matches
+    them to float exactness (the last ulp can differ — XLA may pick a
+    different gemm microkernel for the per-program 2D dots than for the
+    batched einsums).
+    """
+    b, hk, g, dk = q.shape
+    n_pages, _, page_size, dv = v_pages.shape
+    n_pp = page_tables.shape[1]
+    has_pe = q_pe is not None
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(dk)
+    pages_per_program = max(1, min(pages_per_program, n_pp))
+    padc = (-n_pp) % pages_per_program
+    if padc:  # pad with the scratch page; padded positions are masked out
+        page_tables = jnp.pad(page_tables, ((0, 0), (0, padc)))
+    n_groups = page_tables.shape[1] // pages_per_program
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        sm_scale=scale,
+        page_size=page_size,
+        pages_per_program=pages_per_program,
+        n_groups=n_groups,
+        has_pe=has_pe,
+    )
+    dr = 0 if q_pe is None else q_pe.shape[3]
+    q_specs = [pl.BlockSpec((1, 1, g, dk), lambda b_, h_, g_, pt, ln: (b_, h_, 0, 0))]
+    pool_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+    if has_pe:
+        q_specs.append(pl.BlockSpec((1, 1, g, dr), lambda b_, h_, g_, pt, ln: (b_, h_, 0, 0)))
+        pool_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hk, n_groups),
+        in_specs=q_specs + pool_specs + [pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda b_, h_, g_, pt, ln: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    operands = [page_tables.astype(jnp.int32), lengths.astype(jnp.int32), q]
+    if has_pe:
+        operands += [q_pe, k_pages, kpe_pages, v_pages]
+    else:
+        operands += [k_pages, v_pages]
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, dv), q.dtype),
+        interpret=interpret,
+    )(*operands)

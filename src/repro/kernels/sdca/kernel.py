@@ -11,6 +11,7 @@ Grid = (n_workers,): one program per worker (workers are embarrassingly
 parallel within a BSP round).  The ops wrapper falls back to the jnp scan
 (ref.py math) when the shard does not fit the VMEM budget.
 """
+
 from __future__ import annotations
 
 import functools
@@ -24,9 +25,21 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import tpu_compiler_params
 
 
-def _sdca_kernel(x_ref, y_ref, a_ref, w_ref, idx_ref,
-                 a_out_ref, dw_ref, v_ref,
-                 *, h: int, sigma_prime: float, lam: float, n: float):
+def _sdca_kernel(
+    x_ref,
+    y_ref,
+    a_ref,
+    w_ref,
+    idx_ref,
+    a_out_ref,
+    dw_ref,
+    v_ref,
+    *,
+    h: int,
+    sigma_prime: float,
+    lam: float,
+    n: float,
+):
     v_ref[...] = w_ref[0].astype(jnp.float32)
     a_out_ref[0] = a_ref[0]
 
@@ -34,35 +47,30 @@ def _sdca_kernel(x_ref, y_ref, a_ref, w_ref, idx_ref,
         j = idx_ref[0, t]
         # NOTE: pl.dslice(0, 1) instead of a bare 0 index — jax<0.5's
         # load/store discharge rule (interpret mode) rejects python ints
-        x = pl.load(x_ref, (pl.dslice(0, 1), pl.dslice(j, 1),
-                            slice(None)))[0, 0].astype(jnp.float32)   # (d,)
-        yj = pl.load(y_ref, (pl.dslice(0, 1),
-                             pl.dslice(j, 1)))[0, 0].astype(jnp.float32)
-        aj = pl.load(a_out_ref, (pl.dslice(0, 1),
-                                 pl.dslice(j, 1)))[0, 0].astype(jnp.float32)
+        row = (pl.dslice(0, 1), pl.dslice(j, 1))
+        x = pl.load(x_ref, row + (slice(None),))[0, 0].astype(jnp.float32)  # (d,)
+        yj = pl.load(y_ref, row)[0, 0].astype(jnp.float32)
+        aj = pl.load(a_out_ref, row)[0, 0].astype(jnp.float32)
         xx = jnp.sum(x * x)
         q = sigma_prime * xx / (lam * n)
         margin = yj * jnp.sum(v_ref[...] * x)
-        delta_raw = jnp.where(q > 0, (1.0 - margin) / jnp.maximum(q, 1e-30),
-                              0.0)
+        delta_raw = jnp.where(q > 0, (1.0 - margin) / jnp.maximum(q, 1e-30), 0.0)
         a_new = jnp.clip(aj + delta_raw, 0.0, 1.0)
         delta = jnp.where(xx > 0, a_new - aj, 0.0)
-        pl.store(a_out_ref, (pl.dslice(0, 1), pl.dslice(j, 1)),
-                 (aj + delta)[None, None].astype(a_out_ref.dtype))
+        pl.store(a_out_ref, row, (aj + delta)[None, None].astype(a_out_ref.dtype))
         v_ref[...] = v_ref[...] + sigma_prime * delta * yj * x / (lam * n)
         return 0
 
     jax.lax.fori_loop(0, h, step, 0)
-    dw_ref[0] = ((v_ref[...] - w_ref[0].astype(jnp.float32))
-                 / sigma_prime).astype(dw_ref.dtype)
+    dw_ref[0] = ((v_ref[...] - w_ref[0].astype(jnp.float32)) / sigma_prime).astype(dw_ref.dtype)
 
 
 def local_sdca_pallas(
-    X: jnp.ndarray,     # (m, nl, d) worker shards
-    y: jnp.ndarray,     # (m, nl)
-    a: jnp.ndarray,     # (m, nl)
-    w: jnp.ndarray,     # (d,)
-    idx: jnp.ndarray,   # (m, H)
+    X: jnp.ndarray,  # (m, nl, d) worker shards
+    y: jnp.ndarray,  # (m, nl)
+    a: jnp.ndarray,  # (m, nl)
+    w: jnp.ndarray,  # (d,)
+    idx: jnp.ndarray,  # (m, H)
     sigma_prime: float,
     lam: float,
     n: float,
@@ -73,8 +81,9 @@ def local_sdca_pallas(
     m, nl, d = X.shape
     h = idx.shape[1]
     w_b = jnp.broadcast_to(w[None], (m, d))
-    kernel = functools.partial(_sdca_kernel, h=h, sigma_prime=float(sigma_prime),
-                               lam=float(lam), n=float(n))
+    kernel = functools.partial(
+        _sdca_kernel, h=h, sigma_prime=float(sigma_prime), lam=float(lam), n=float(n)
+    )
     a_out, dw = pl.pallas_call(
         kernel,
         grid=(m,),
@@ -94,8 +103,7 @@ def local_sdca_pallas(
             jax.ShapeDtypeStruct((m, d), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel",)),
+        compiler_params=tpu_compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(X, y, a, w_b, idx.astype(jnp.int32))
     return a_out, dw

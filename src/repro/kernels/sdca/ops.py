@@ -1,4 +1,5 @@
 """jit'd wrapper for the local SDCA inner loop (kernel or jnp scan)."""
+
 from __future__ import annotations
 
 from typing import Tuple
@@ -14,25 +15,31 @@ VMEM_BUDGET = 12 * 1024 * 1024
 
 
 def local_sdca(
-    X: jnp.ndarray,     # (m, nl, d)
+    X: jnp.ndarray,  # (m, nl, d)
     y: jnp.ndarray,
     a: jnp.ndarray,
     w: jnp.ndarray,
-    idx: jnp.ndarray,   # (m, H)
+    idx: jnp.ndarray,  # (m, H)
     sigma_prime: float,
     lam: float,
     n: float,
     *,
     use_pallas: bool = False,
     interpret: bool = True,
+    tuned: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     m, nl, d = X.shape
+    if tuned:
+        from repro.kernels.flash_decode.ops import _tuned_value
+
+        shape = {"m": m, "nl": nl, "d": d, "h": idx.shape[1]}
+        use_pallas = bool(_tuned_value("sdca", shape, X.dtype, "use_pallas", int(use_pallas)))
     fits_vmem = (nl * d + 2 * nl + 2 * d) * 4 <= VMEM_BUDGET
     if use_pallas and fits_vmem:
-        return local_sdca_pallas(X, y, a, w, idx, sigma_prime, lam, n,
-                                 interpret=interpret)
-    new_a, dw = jax.vmap(
-        lambda Xk, yk, ak, ik: local_sdca_ref(Xk, yk, ak, w, ik,
-                                              sigma_prime, lam, n)
-    )(X, y, a, idx)
+        return local_sdca_pallas(X, y, a, w, idx, sigma_prime, lam, n, interpret=interpret)
+
+    def one_worker(Xk, yk, ak, ik):
+        return local_sdca_ref(Xk, yk, ak, w, ik, sigma_prime, lam, n)
+
+    new_a, dw = jax.vmap(one_worker)(X, y, a, idx)
     return new_a, dw

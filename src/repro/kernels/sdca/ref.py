@@ -3,6 +3,7 @@
 Identical math to repro.optim.cocoa._local_sdca for a single worker; the
 Pallas kernel (kernel.py) is validated against this.
 """
+
 from __future__ import annotations
 
 from typing import Tuple
@@ -12,11 +13,11 @@ import jax.numpy as jnp
 
 
 def local_sdca_ref(
-    X: jnp.ndarray,     # (nl, d)
-    y: jnp.ndarray,     # (nl,)
-    a: jnp.ndarray,     # (nl,) dual vars (a = alpha * y in [0, 1])
-    w: jnp.ndarray,     # (d,) current global model
-    idx: jnp.ndarray,   # (H,) coordinate order
+    X: jnp.ndarray,  # (nl, d)
+    y: jnp.ndarray,  # (nl,)
+    a: jnp.ndarray,  # (nl,) dual vars (a = alpha * y in [0, 1])
+    w: jnp.ndarray,  # (d,) current global model
+    idx: jnp.ndarray,  # (H,) coordinate order
     sigma_prime: float,
     lam: float,
     n: float,

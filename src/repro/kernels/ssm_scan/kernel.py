@@ -8,6 +8,7 @@ chunk's x/dt/B/C tiles already resident in VMEM, so HBM traffic is
 O(S * (2*Dn + 2*N)) per batch element (the streaming minimum) instead of the
 O(S * Dn * N) a naive materialized scan would move.
 """
+
 from __future__ import annotations
 
 import functools
@@ -20,24 +21,36 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import tpu_compiler_params
 
 
-def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
-                h_ref, *, chunk: int, n_chunks: int, seq_len: int):
+def _ssm_kernel(
+    x_ref,
+    dt_ref,
+    a_ref,
+    b_ref,
+    c_ref,
+    d_ref,
+    y_ref,
+    h_ref,
+    *,
+    chunk: int,
+    n_chunks: int,
+    seq_len: int,
+):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
         h_ref[...] = jnp.zeros_like(h_ref)
 
-    a = a_ref[...].astype(jnp.float32)        # (bd, N)
-    dvec = d_ref[...].astype(jnp.float32)     # (bd,)
-    x = x_ref[0].astype(jnp.float32)          # (chunk, bd)
-    dt = dt_ref[0].astype(jnp.float32)        # (chunk, bd)
-    bmat = b_ref[0].astype(jnp.float32)       # (chunk, N)
-    cmat = c_ref[0].astype(jnp.float32)       # (chunk, N)
+    a = a_ref[...].astype(jnp.float32)  # (bd, N)
+    dvec = d_ref[...].astype(jnp.float32)  # (bd,)
+    x = x_ref[0].astype(jnp.float32)  # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)  # (chunk, bd)
+    bmat = b_ref[0].astype(jnp.float32)  # (chunk, N)
+    cmat = c_ref[0].astype(jnp.float32)  # (chunk, N)
 
     def step(t, carry):
         h, y = carry
-        decay = jnp.exp(dt[t][:, None] * a)              # (bd, N)
+        decay = jnp.exp(dt[t][:, None] * a)  # (bd, N)
         h = decay * h + (dt[t] * x[t])[:, None] * bmat[t][None, :]
         yt = jnp.sum(h * cmat[t][None, :], axis=1) + dvec * x[t]
         y = jax.lax.dynamic_update_slice(y, yt[None, :], (t, 0))
@@ -50,12 +63,12 @@ def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
 
 
 def selective_scan_pallas(
-    x: jnp.ndarray,   # (Bt, S, Dn)
+    x: jnp.ndarray,  # (Bt, S, Dn)
     dt: jnp.ndarray,  # (Bt, S, Dn)
-    A: jnp.ndarray,   # (Dn, N)
-    B: jnp.ndarray,   # (Bt, S, N)
-    C: jnp.ndarray,   # (Bt, S, N)
-    D: jnp.ndarray,   # (Dn,)
+    A: jnp.ndarray,  # (Dn, N)
+    B: jnp.ndarray,  # (Bt, S, N)
+    C: jnp.ndarray,  # (Bt, S, N)
+    D: jnp.ndarray,  # (Dn,)
     *,
     chunk: int = 128,
     d_block: int = 256,
@@ -76,8 +89,7 @@ def selective_scan_pallas(
     D_ = jnp.pad(D, (0, pad_d))
     nc = x_.shape[1] // chunk
     nd = x_.shape[2] // d_block
-    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=nc,
-                               seq_len=s)
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=nc, seq_len=s)
     y = pl.pallas_call(
         kernel,
         grid=(bt, nd, nc),
@@ -89,12 +101,12 @@ def selective_scan_pallas(
             pl.BlockSpec((1, chunk, n), lambda b, di, ci: (b, ci, 0)),
             pl.BlockSpec((d_block,), lambda b, di, ci: (di,)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, d_block),
-                               lambda b, di, ci: (b, ci, di)),
+        out_specs=pl.BlockSpec((1, chunk, d_block), lambda b, di, ci: (b, ci, di)),
         out_shape=jax.ShapeDtypeStruct((bt, nc * chunk, nd * d_block), x.dtype),
         scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
         interpret=interpret,
     )(x_, dt_, A_, B_, C_, D_)
     return y[:, :s, :dn]

@@ -11,6 +11,7 @@ per-step (Bt, chunk, Dn, N) products.
 The Pallas kernel (kernel.py) implements the same chunking with the
 (chunk, Dn_block) tiles resident in VMEM.
 """
+
 from __future__ import annotations
 
 from typing import Optional, Tuple
@@ -27,18 +28,24 @@ def _combine(e1, e2):
 
 
 def selective_scan(
-    x: jnp.ndarray,   # (Bt, S, Dn)
+    x: jnp.ndarray,  # (Bt, S, Dn)
     dt: jnp.ndarray,  # (Bt, S, Dn) positive
-    A: jnp.ndarray,   # (Dn, N) negative
-    B: jnp.ndarray,   # (Bt, S, N)
-    C: jnp.ndarray,   # (Bt, S, N)
-    D: jnp.ndarray,   # (Dn,)
+    A: jnp.ndarray,  # (Dn, N) negative
+    B: jnp.ndarray,  # (Bt, S, N)
+    C: jnp.ndarray,  # (Bt, S, N)
+    D: jnp.ndarray,  # (Dn,)
     h0: Optional[jnp.ndarray] = None,
     *,
     chunk: int = 128,
+    tuned: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     bt, s, dn = x.shape
     n = A.shape[1]
+    if tuned:
+        from repro.kernels.flash_decode.ops import _tuned_value
+
+        shape = {"bt": bt, "s": s, "dn": dn, "n": n}
+        chunk = _tuned_value("ssm_scan", shape, x.dtype, "chunk", chunk)
     chunk = min(chunk, s)
     pad = (-s) % chunk
     if pad:
@@ -51,20 +58,19 @@ def selective_scan(
     xc, dtc, Bc, Cc = map(resh, (x_, dt_, B_, C_))  # (nc, Bt, chunk, ...)
     Af = A.astype(jnp.float32)
     Df = D.astype(jnp.float32)
-    h_init = (jnp.zeros((bt, dn, n), jnp.float32) if h0 is None
-              else h0.astype(jnp.float32))
+    h_init = jnp.zeros((bt, dn, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
 
     @jax.checkpoint
     def chunk_body(h, inputs):
         xi, dti, Bi, Ci = inputs
         xi = xi.astype(jnp.float32)
         dti = dti.astype(jnp.float32)
-        a = jnp.exp(dti[..., None] * Af[None, None])          # (Bt,c,Dn,N)
+        a = jnp.exp(dti[..., None] * Af[None, None])  # (Bt,c,Dn,N)
         bx = (dti * xi)[..., None] * Bi.astype(jnp.float32)[:, :, None, :]
         a_cum, s_cum = lax.associative_scan(_combine, (a, bx), axis=1)
-        hc = a_cum * h[:, None] + s_cum                        # (Bt,c,Dn,N)
-        y = jnp.einsum("bcdn,bcn->bcd", hc, Ci.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)
+        hc = a_cum * h[:, None] + s_cum  # (Bt,c,Dn,N)
+        ci_f = Ci.astype(jnp.float32)
+        y = jnp.einsum("bcdn,bcn->bcd", hc, ci_f, preferred_element_type=jnp.float32)
         y = y + Df[None, None] * xi
         return hc[:, -1], y.astype(x.dtype)
 
@@ -74,13 +80,13 @@ def selective_scan(
 
 
 def selective_scan_step(
-    x_t: jnp.ndarray,   # (Bt, Dn)
+    x_t: jnp.ndarray,  # (Bt, Dn)
     dt_t: jnp.ndarray,  # (Bt, Dn)
-    A: jnp.ndarray,     # (Dn, N)
-    B_t: jnp.ndarray,   # (Bt, N)
-    C_t: jnp.ndarray,   # (Bt, N)
-    D: jnp.ndarray,     # (Dn,)
-    h: jnp.ndarray,     # (Bt, Dn, N) fp32 state
+    A: jnp.ndarray,  # (Dn, N)
+    B_t: jnp.ndarray,  # (Bt, N)
+    C_t: jnp.ndarray,  # (Bt, N)
+    D: jnp.ndarray,  # (Dn,)
+    h: jnp.ndarray,  # (Bt, Dn, N) fp32 state
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single decode step: O(Dn * N) per token."""
     xf = x_t.astype(jnp.float32)

@@ -3,6 +3,7 @@
 h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
 y_t = sum_n C_t[n] * h_t[:, n] + D * x_t
 """
+
 from __future__ import annotations
 
 from typing import Optional, Tuple
@@ -12,12 +13,12 @@ from jax import lax
 
 
 def selective_scan_ref(
-    x: jnp.ndarray,   # (Bt, S, Dn)
+    x: jnp.ndarray,  # (Bt, S, Dn)
     dt: jnp.ndarray,  # (Bt, S, Dn)  (already softplus'd, positive)
-    A: jnp.ndarray,   # (Dn, N)      (negative)
-    B: jnp.ndarray,   # (Bt, S, N)
-    C: jnp.ndarray,   # (Bt, S, N)
-    D: jnp.ndarray,   # (Dn,)
+    A: jnp.ndarray,  # (Dn, N)      (negative)
+    B: jnp.ndarray,  # (Bt, S, N)
+    C: jnp.ndarray,  # (Bt, S, N)
+    D: jnp.ndarray,  # (Dn,)
     h0: Optional[jnp.ndarray] = None,  # (Bt, Dn, N)
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     bt, s, dn = x.shape
@@ -31,7 +32,7 @@ def selective_scan_ref(
     h = jnp.zeros((bt, dn, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
 
     def step(h, t):
-        a = jnp.exp(dtf[:, t, :, None] * Af[None])            # (Bt, Dn, N)
+        a = jnp.exp(dtf[:, t, :, None] * Af[None])  # (Bt, Dn, N)
         bx = (dtf[:, t] * xf[:, t])[..., None] * Bf[:, t, None, :]
         h = a * h + bx
         y = jnp.einsum("bdn,bn->bd", h, Cf[:, t]) + Df[None] * xf[:, t]

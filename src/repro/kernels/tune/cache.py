@@ -1,0 +1,122 @@
+"""Shape-keyed persisted config cache for the kernel autotuner.
+
+A cache entry maps one ``(family, shape, dtype, backend)`` key to the
+block config the sweep harness measured fastest, plus the measurement
+itself.  Keys are flat strings::
+
+    flash_decode_paged|b4_d64_g2_hk4_npp128_page16|float32|cpu
+
+— family, underscore-joined ``<name><value>`` shape items in sorted key
+order, jnp dtype name, and ``jax.default_backend()``.  The value side
+keeps the original shape dict so consumers (telemetry export, capacity
+planning) never parse the signature back.
+
+Persistence is a single JSON file (default ``results/tune_cache.json``,
+overridable via ``$REPRO_TUNE_CACHE`` or the ``path`` argument), written
+atomically (tmp + rename).  ``path=None`` keeps the cache in memory only.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+
+DEFAULT_CACHE_PATH = "results/tune_cache.json"
+_SCHEMA_VERSION = 1
+
+
+def dtype_name(dtype) -> str:
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype).name
+
+
+def backend_name() -> str:
+    return jax.default_backend()
+
+
+def shape_sig(shape: Dict[str, int]) -> str:
+    return "_".join(f"{k}{int(v)}" for k, v in sorted(shape.items()))
+
+
+def cache_key(family: str, shape: Dict[str, int], dtype, backend: Optional[str] = None) -> str:
+    return "|".join([family, shape_sig(shape), dtype_name(dtype), backend or backend_name()])
+
+
+class ConfigCache:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, Dict] = {}
+        self.sweeps = 0  # incremented by the sweep harness, not persisted
+        if path is not None and Path(path).exists():
+            self.load()
+
+    @classmethod
+    def default_path(cls) -> str:
+        return os.environ.get("REPRO_TUNE_CACHE", DEFAULT_CACHE_PATH)
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> Optional[Dict]:
+        return self.entries.get(key)
+
+    def config(self, key: str) -> Optional[Dict]:
+        entry = self.entries.get(key)
+        return None if entry is None else entry["config"]
+
+    def put(
+        self,
+        key: str,
+        *,
+        family: str,
+        shape: Dict[str, int],
+        dtype,
+        config: Dict,
+        us_per_call: float,
+        swept: int,
+        pruned: int,
+        backend: Optional[str] = None,
+    ) -> Dict:
+        entry = {
+            "family": family,
+            "shape": {k: int(v) for k, v in shape.items()},
+            "dtype": dtype_name(dtype),
+            "backend": backend or backend_name(),
+            "config": {k: int(v) for k, v in config.items()},
+            "us_per_call": float(us_per_call),
+            "candidates_swept": int(swept),
+            "candidates_pruned": int(pruned),
+        }
+        self.entries[key] = entry
+        return entry
+
+    # ------------------------------------------------------------------
+    def load(self) -> "ConfigCache":
+        with open(self.path) as f:
+            payload = json.load(f)
+        if payload.get("version") != _SCHEMA_VERSION:
+            # stale schema: start fresh rather than misread configs
+            self.entries = {}
+            return self
+        self.entries = payload["entries"]
+        return self
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        path = Path(self.path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": _SCHEMA_VERSION, "entries": self.entries}
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise

@@ -1,0 +1,60 @@
+"""Export tuned kernel timings as telemetry consumers understand.
+
+Two consumers:
+
+* the benchmark harness (``benchmarks/run.py``) ingests ``bench_rows`` —
+  one ``tune/<family>/<sig>`` row per cache entry, so tuned timings ride
+  the same BENCH_*.json trajectory the perf gate tracks;
+* the capacity planner (``repro.serve.planner``) and the dry-run system
+  model (``repro.launch.dryrun``) ingest ``decode_step_rows`` — measured
+  paged-decode kernel timings the planner scales to whole decode steps
+  (``n_layers * kernel + overhead``), so f(b) can be fitted from measured
+  kernel costs before any engine traffic exists.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.kernels.tune.cache import ConfigCache
+from repro.kernels.tune.roofline import estimate, roofline_fraction_us
+
+Row = Tuple[str, float, str]
+
+
+def bench_rows(cache: ConfigCache) -> List[Row]:
+    """(name, us_per_call, derived) rows, one per cache entry."""
+    rows: List[Row] = []
+    for key in sorted(cache.entries):
+        e = cache.entries[key]
+        est = estimate(e["family"], e["shape"], e["config"])
+        frac = roofline_fraction_us(e["us_per_call"], est.flops, est.bytes_moved)
+        cfg = ";".join(f"{k}={v}" for k, v in sorted(e["config"].items()))
+        sig = key.split("|", 2)[1]
+        derived = (
+            f"{cfg};swept={e['candidates_swept']};"
+            f"pruned={e['candidates_pruned']};backend={e['backend']};"
+            f"x_lightspeed={frac:.1f}"
+        )
+        rows.append((f"tune/{e['family']}/{sig}", e["us_per_call"], derived))
+    return rows
+
+
+def decode_step_rows(cache: ConfigCache) -> List[Dict]:
+    """Measured paged-decode timings as ``{batch, step_s}`` telemetry rows
+    (the shape the serve planner ingests; per-kernel seconds — layer-count
+    scaling happens in ``CapacityPlanner.observe_tuned_kernels``).  One row
+    per ``flash_decode_paged`` entry; batch comes from the entry's stored
+    shape dict, never from parsing the signature."""
+    rows = []
+    for e in cache.entries.values():
+        if e["family"] != "flash_decode_paged":
+            continue
+        rows.append(
+            {
+                "batch": int(e["shape"]["b"]),
+                "step_s": e["us_per_call"] * 1e-6,
+                "source": "kernel_tuner",
+            }
+        )
+    return rows

@@ -219,10 +219,38 @@ def analyze(lowered, compiled, ctx) -> dict:
     }
 
 
+def attach_tuned_kernels(result: dict, tune_cache_path: str) -> dict:
+    """Additive: record autotuner-measured kernel timings next to the
+    analytic roofline numbers, so the system model can be fitted on
+    measured kernel costs instead of defaults.  Decode cells whose batch
+    matches a measured paged-decode entry also get ``t_kernel_measured_s``
+    (layers x measured kernel); entries at other batches are ignored
+    rather than passed off as measurements of this cell."""
+    from repro.kernels.tune import ConfigCache, bench_rows
+
+    cache = ConfigCache(tune_cache_path)
+    result["tuned_kernel_rows"] = [
+        {"name": n, "us_per_call": us, "derived": d}
+        for n, us, d in bench_rows(cache)
+    ]
+    if result.get("kind") == "decode":
+        batch = SHAPES_BY_NAME[result["shape"]].global_batch
+        matched = [
+            e["us_per_call"] * 1e-6
+            for e in cache.entries.values()
+            if e["family"] == "flash_decode_paged" and e["shape"]["b"] == batch
+        ]
+        if matched:
+            cfg = get_config(result["arch"])
+            result["t_kernel_measured_s"] = cfg.n_layers * min(matched)
+    return result
+
+
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
              force: bool = False, rules_overrides=None,
              runtime_overrides=None, tag: str = "",
-             serve_params_bf16: bool = False) -> dict:
+             serve_params_bf16: bool = False,
+             tune_cache: str | None = None) -> dict:
     multi = mesh_kind == "multi"
     suffix = f"-{tag}" if tag else ""
     out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
@@ -236,6 +264,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
         result = analyze(lowered, compiled, ctx)
         result["status"] = "ok"
         result["compile_seconds"] = time.time() - t0
+        if tune_cache:
+            result = attach_tuned_kernels(result, tune_cache)
     except Exception as e:  # noqa: BLE001 — recorded, sweep continues
         result = {"arch": arch, "shape": shape_name, "mesh_kind": mesh_kind,
                   "status": "error", "error": f"{type(e).__name__}: {e}",
@@ -318,6 +348,9 @@ def main():
                     default=[16, 32, 64, 128, 256])
     ap.add_argument("--smoke", action="store_true",
                     help="use the shrunk config (CPU-container compile times)")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="attach measured kernel timings from this "
+                         "autotuner config cache to each cell's JSON")
     args = ap.parse_args()
     out_dir = Path(args.out)
     if args.fm:
@@ -330,7 +363,8 @@ def main():
     cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
     for arch, shape in cells:
         for mk in meshes:
-            r = run_cell(arch, shape, mk, out_dir, force=args.force)
+            r = run_cell(arch, shape, mk, out_dir, force=args.force,
+                         tune_cache=args.tune_cache)
             status = r.get("status")
             if status == "ok":
                 print(f"[ok]   {arch:24s} {shape:12s} {mk:6s} "

@@ -150,6 +150,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged-impl", default="stream",
+                    choices=["stream", "pallas", "gather"],
+                    help="paged decode implementation (bit-identical; "
+                         "stream is paged-native, gather is the legacy "
+                         "oracle)")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="seed the capacity planner with measured "
+                         "paged-decode kernel timings from this autotuner "
+                         "config cache before fitting")
     args = ap.parse_args()
 
     if not args.continuous:
@@ -171,7 +180,8 @@ def main():
 
     eng = ServeEngine(args.arch, smoke=args.smoke, max_batch=args.max_batch,
                       page_size=args.page_size,
-                      max_seq=64 + args.page_size * 2, seed=args.seed)
+                      max_seq=64 + args.page_size * 2, seed=args.seed,
+                      paged_impl=args.paged_impl)
     reqs = _mixed_trace(eng, args.requests, args.seed)
     stats = eng.run()
     done = [r for r in reqs if r.finished_step >= 0]
@@ -183,6 +193,14 @@ def main():
     print(f"join-on-arrival: {joins} requests joined a running batch")
 
     planner = CapacityPlanner()
+    if args.tune_cache:
+        from repro.kernels.tune import ConfigCache, decode_step_rows
+
+        rows = decode_step_rows(ConfigCache(args.tune_cache))
+        n_layers = eng.cfg.n_layers
+        n = planner.observe_tuned_kernels(rows, n_layers=n_layers)
+        print(f"capacity plan: seeded with {n} measured kernel row(s) "
+              f"from {args.tune_cache} (x{n_layers} layers)")
     planner.observe_telemetry(eng.telemetry)
     try:
         planner.fit()

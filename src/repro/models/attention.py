@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.kernels.flash_attention.ops import decode_attention, flash_attention
+from repro.kernels.flash_decode.ops import paged_decode_attention
 from repro.models.layers import apply_rope, cast_to, rms_norm
 from repro.models.param import ann
 
@@ -130,10 +131,14 @@ def apply_attention_decode_paged(
     page_tables: jnp.ndarray,  # (B, pages_per_seq) physical page ids
     *,
     page_size: int,
+    paged_impl: str = "stream",
+    pages_per_program: Optional[int] = None,
+    interpret: bool = True,
 ) -> Tuple[jnp.ndarray, Dict]:
-    """Paged-KV decode: scatter the new token's K/V into its page, gather the
-    request's pages into a contiguous (B, Hk, S, hd) view, and run the
-    existing ``decode_attention`` kernel on it."""
+    """Paged-KV decode: scatter the new token's K/V into its page, then run
+    decode attention against the page pool in place.  ``paged_impl`` picks
+    the implementation (paged-native stream/pallas, or the legacy dense
+    gather oracle — all bit-identical, see kernels/flash_decode/ops.py)."""
     b = x.shape[0]
     positions = lengths[:, None].astype(jnp.int32)
     q, k, v = _project_qkv(p, x, cfg, positions, None)
@@ -147,14 +152,10 @@ def apply_attention_decode_paged(
         k_new.astype(cache["k"].dtype))
     v_pages = cache["v"].at[pid, :, offset, :].set(
         v_new.astype(cache["v"].dtype))
-    # gather: (B, P, Hk, page, hd) -> (B, Hk, P*page, hd)
-    n_pp = page_tables.shape[1]
-    hk, hd = k_pages.shape[1], k_pages.shape[3]
-    k_full = k_pages[page_tables].transpose(0, 2, 1, 3, 4).reshape(
-        b, hk, n_pp * page_size, hd)
-    v_full = v_pages[page_tables].transpose(0, 2, 1, 3, 4).reshape(
-        b, hk, n_pp * page_size, hd)
-    out = decode_attention(q[:, 0], k_full, v_full, lengths + 1)  # (B, H, hd)
+    out = paged_decode_attention(
+        q[:, 0], k_pages, v_pages, lengths + 1, page_tables,
+        impl=paged_impl, pages_per_program=pages_per_program,
+        interpret=interpret)  # (B, H, hd)
     y = out.reshape(b, cfg.n_heads * cfg.head_dim) @ cast_to(
         p["wo"], cfg.dtype)
     return y[:, None, :], {"k": k_pages, "v": v_pages}

@@ -113,11 +113,16 @@ def apply_block_decode_paged(
         if _uses_mla(cfg):
             y, new_cache = mla_mod.apply_mla_decode_paged(
                 p["mixer"], h, cfg, cache, lengths, page_tables,
-                page_size=rt.page_size, absorb=rt.mla_absorb)
+                page_size=rt.page_size, absorb=rt.mla_absorb,
+                paged_impl=rt.paged_impl,
+                pages_per_program=rt.pages_per_program,
+                interpret=rt.interpret)
         else:
             y, new_cache = attn_mod.apply_attention_decode_paged(
                 p["mixer"], h, cfg, cache, lengths, page_tables,
-                page_size=rt.page_size)
+                page_size=rt.page_size, paged_impl=rt.paged_impl,
+                pages_per_program=rt.pages_per_program,
+                interpret=rt.interpret)
     else:
         y, new_cache = mamba_mod.apply_mamba_decode(
             p["mixer"], h, cfg, cache, constrain_fn=rt.constrain_fn)

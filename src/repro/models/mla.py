@@ -13,6 +13,12 @@ Decode caches ONLY (c_kv, k_pe) — the MLA memory win.  Two decode paths:
   attention runs directly in the latent space — scores against c_kv, context
   in latent space, one (H, kv_lora, v) expansion at the end.  This is the
   DeepSeek-paper inference optimization; EXPERIMENTS.md §Perf quantifies it.
+
+The *paged* decode path (``apply_mla_decode_paged``, serving) is
+paged-native and always absorbed: scores and context read the latent page
+pool in place via ``kernels.flash_decode.ops.paged_latent_decode_attention``
+(stream / pallas / gather impls, mutually bit-exact for stream/gather);
+``paged_impl="legacy"`` keeps the old gather + ``_mla_decode_attn`` path.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_decode.ops import paged_latent_decode_attention
 from repro.models.layers import apply_rope, cast_to, rms_norm
 from repro.models.param import ann
 
@@ -178,12 +185,18 @@ def apply_mla_decode_paged(
     page_size: int,
     absorb: bool = False,
     chunk: int = 2048,
+    paged_impl: str = "stream",
+    pages_per_program: Optional[int] = None,
+    interpret: bool = True,
 ) -> Tuple[jnp.ndarray, Dict]:
     """Paged latent-cache decode: scatter the new (c_kv, k_pe) into its page,
-    gather this batch's pages into contiguous views, then run the same
-    latent-attention core as the contiguous path."""
+    then attend over the latent pool in place (absorbed form: W_uk folded
+    into the query, W_uv applied once to the latent context), via
+    ``paged_latent_decode_attention``.  ``paged_impl="legacy"`` keeps the
+    pre-paged-native behavior: gather contiguous views and run
+    ``_mla_decode_attn`` with the caller's ``absorb``/``chunk``."""
     m, dt = cfg.mla, cfg.dtype
-    b = x.shape[0]
+    b, h = x.shape[0], cfg.n_heads
     positions = lengths[:, None].astype(jnp.int32)
     q_nope, q_pe = _mla_q(p, x, cfg, positions)
     ckv_new, kpe_new = _mla_kv_latent(p, x, cfg, positions)
@@ -194,14 +207,30 @@ def apply_mla_decode_paged(
         ckv_new[:, 0].astype(cache["ckv"].dtype))
     kpe_pages = cache["kpe"].at[pid, offset, :].set(
         kpe_new[:, 0].astype(cache["kpe"].dtype))
-    n_pp = page_tables.shape[1]
-    ckv_c = ckv_pages[page_tables].reshape(b, n_pp * page_size, m.kv_lora_rank)
-    kpe_c = kpe_pages[page_tables].reshape(b, n_pp * page_size,
-                                           m.qk_rope_head_dim)
-    out = _mla_decode_attn(p, q_nope[:, 0], q_pe[:, 0], ckv_c, kpe_c,
-                           lengths + 1, cfg, absorb=absorb, chunk=chunk)
-    y = out.reshape(b, cfg.n_heads * m.v_head_dim) @ cast_to(p["wo"], dt)
-    return y[:, None, :], {"ckv": ckv_pages, "kpe": kpe_pages}
+    new_cache = {"ckv": ckv_pages, "kpe": kpe_pages}
+    if paged_impl == "legacy":
+        n_pp = page_tables.shape[1]
+        ckv_c = ckv_pages[page_tables].reshape(b, n_pp * page_size,
+                                               m.kv_lora_rank)
+        kpe_c = kpe_pages[page_tables].reshape(b, n_pp * page_size,
+                                               m.qk_rope_head_dim)
+        out = _mla_decode_attn(p, q_nope[:, 0], q_pe[:, 0], ckv_c, kpe_c,
+                               lengths + 1, cfg, absorb=absorb, chunk=chunk)
+        y = out.reshape(b, h * m.v_head_dim) @ cast_to(p["wo"], dt)
+        return y[:, None, :], new_cache
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    wkv_b = cast_to(p["wkv_b"], dt).reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    wk = wkv_b[..., : m.qk_nope_head_dim]
+    wv = wkv_b[..., m.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], wk)  # (B, H, r)
+    ctx_lat = paged_latent_decode_attention(
+        q_lat, q_pe[:, 0], ckv_pages, kpe_pages, lengths + 1, page_tables,
+        sm_scale=scale, impl=paged_impl,
+        pages_per_program=pages_per_program, interpret=interpret)
+    out = jnp.einsum("bhr,rhe->bhe", ctx_lat.astype(dt), wv)  # (B, H, v)
+    y = out.reshape(b, h * m.v_head_dim) @ cast_to(p["wo"], dt)
+    return y[:, None, :], new_cache
 
 
 def _mla_decode_attn(

@@ -250,7 +250,12 @@ class LM:
         ``repro.serve.cache.init_paged_cache``) and recurrent-state leaves by
         slot.  ``page_tables`` (B, pages_per_seq) int32 maps each sequence's
         logical pages to physical pages; page 0 is the scratch page that idle
-        slots write into.  Returns (logits (B,V), new_cache)."""
+        slots write into.  Attention over the pool is paged-native by
+        default (``Runtime.paged_impl``: "stream" jnp / "pallas" TPU kernel,
+        with the legacy "gather" oracle bit-identical to stream — see
+        kernels/flash_decode/ops.py); ``Runtime.pages_per_program`` defaults
+        to the ``repro.kernels.tune`` config cache.  Returns
+        (logits (B,V), new_cache)."""
         cfg, rt = self.cfg, self.rt
         x = embed_tokens(params["embed"], tokens[:, None], cfg.dtype)
         new_head = []

@@ -56,6 +56,7 @@ class ServeEngine:
         prefix_caching: bool = True,
         collect_logits: bool = False,
         rt: Optional[Runtime] = None,
+        paged_impl: Optional[str] = None,
     ):
         self.cfg = self.config_for(arch, smoke)
         self.seed = seed
@@ -65,9 +66,23 @@ class ServeEngine:
         # makes prefix-position activations — and therefore shared prefix
         # pages — bitwise independent of what follows them, which is what
         # lets prefix reuse skip rewriting shared pages (see write_prefill).
+        # paged_impl picks the decode-attention implementation ("stream" =
+        # paged-native, "pallas" = TPU kernel, "gather" = legacy oracle);
+        # stream/gather are bit-identical, so prefix guarantees hold under
+        # any.  When both rt and paged_impl are given, paged_impl wins (an
+        # explicitly requested implementation must not be silently ignored).
         self.rt = rt or Runtime(
-            remat="none", block_q=16, block_k=16, scan_chunk=32, page_size=page_size
+            remat="none",
+            block_q=16,
+            block_k=16,
+            scan_chunk=32,
+            page_size=page_size,
+            paged_impl=paged_impl or "stream",
         )
+        if paged_impl is not None and self.rt.paged_impl != paged_impl:
+            import dataclasses
+
+            self.rt = dataclasses.replace(self.rt, paged_impl=paged_impl)
         if self.rt.page_size != page_size:
             raise ValueError("Runtime.page_size must match engine page_size")
         self.lm = LM(self.cfg, self.rt)
@@ -97,6 +112,10 @@ class ServeEngine:
         self.page_tables = np.full(
             (max_batch, self.pages_per_seq), SCRATCH_PAGE, np.int32
         )
+        # device-resident mirror of page_tables: rows only change on
+        # join/evict, so we sync those rows in place instead of re-uploading
+        # the whole host array every decode step
+        self.page_tables_dev = jnp.asarray(self.page_tables)
         self.lengths = np.zeros(max_batch, np.int32)
         self.next_tokens = np.zeros(max_batch, np.int32)
         self._prefill = jax.jit(self.lm.prefill)
@@ -189,12 +208,14 @@ class ServeEngine:
         row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
         row[: len(req.page_ids)] = req.page_ids
         self.page_tables[slot] = row
+        self.page_tables_dev = self.page_tables_dev.at[slot].set(jnp.asarray(row))
         self.next_tokens[slot] = tok
 
     def _release_slot(self, slot: int) -> None:
         self.lengths[slot] = 0
         self.next_tokens[slot] = 0
         self.page_tables[slot] = SCRATCH_PAGE
+        self.page_tables_dev = self.page_tables_dev.at[slot].set(SCRATCH_PAGE)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -216,7 +237,7 @@ class ServeEngine:
             jnp.asarray(self.next_tokens),
             jnp.asarray(self.lengths),
             self.cache,
-            jnp.asarray(self.page_tables),
+            self.page_tables_dev,
         )
         logits_np = np.asarray(logits_dev)
         dt = time.perf_counter() - t0

@@ -68,6 +68,21 @@ class CapacityPlanner:
             if row["batch"] > 0:
                 self.observe(row["batch"], row["step_s"])
 
+    def observe_tuned_kernels(
+        self, rows: Sequence[Dict], *, n_layers: int = 1, overhead_s: float = 0.0
+    ) -> int:
+        """Seed the step model from autotuner-measured kernel timings
+        (``repro.kernels.tune.decode_step_rows``): one decode step is
+        approximated as ``n_layers * kernel + overhead``.  Lets f(b) be
+        fitted from measured kernel costs before (or instead of) live
+        engine telemetry.  Returns the number of rows ingested."""
+        n = 0
+        for row in rows:
+            if row["batch"] > 0:
+                self.observe(row["batch"], n_layers * row["step_s"] + overhead_s)
+                n += 1
+        return n
+
     def fit(self) -> "CapacityPlanner":
         if len({o.batch for o in self.observations}) < 2:
             raise ValueError("need observations at >= 2 distinct batch sizes")
