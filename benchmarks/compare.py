@@ -29,7 +29,11 @@ CPU work are gated —
 * rows with a baseline ``us_per_call`` below ``--min-us`` are excluded: the
   harness reuses that column for derived non-time metrics (counts, ids) and
   sub-millisecond timings are below the shared-runner noise floor;
-* rows present in only one payload are reported but never gated.
+* rows present in only one payload are reported but never ratio-gated —
+  except rows under ``serve/``: those are the engine-level serving benches
+  (paged decode, chunked prefill, speculative decode), and one vanishing
+  from CURRENT means a serving fast path silently stopped being measured,
+  which fails the comparison like a regression.
 
 The baseline was measured on a different machine than the CI runner; the
 generous 2.5x default absorbs machine-speed variance, so this gate catches
@@ -45,6 +49,8 @@ import re
 import sys
 
 EXCLUDED_PREFIXES = ("kernels/", "roofline/", "tune/")
+# baseline rows under these prefixes must still exist in CURRENT
+REQUIRED_PREFIXES = ("serve/",)
 
 
 def newest_baseline(directory: str) -> str:
@@ -108,8 +114,13 @@ def main(argv=None) -> int:
 
     regressions = []
     errors = []
+    missing = []
     compared = 0
     for name, base_us in sorted(base.items()):
+        if name.startswith(REQUIRED_PREFIXES) and name not in cur:
+            print(f"  [MISSING] {name}: required row absent from current")
+            missing.append(name)
+            continue
         if not comparable(name, base_us, args.min_us):
             continue
         if name not in cur:
@@ -134,6 +145,10 @@ def main(argv=None) -> int:
     if compared == 0:
         print("compare: no comparable rows between payloads", file=sys.stderr)
         return 2
+    if missing:
+        print(f"compare: required rows missing from current: {missing}",
+              file=sys.stderr)
+        return 1
     if errors:
         print(f"compare: ERROR rows in current: {errors}", file=sys.stderr)
         return 1

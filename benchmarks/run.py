@@ -67,6 +67,14 @@ def main() -> None:
         rows.append(("serve/decode_paged/ERROR", 0.0,
                      f"{type(e).__name__}:{e}"))
 
+    # engine-level chunked prefill + speculative decode on a bursty trace
+    try:
+        from benchmarks.serve_engine import bench_serve_engine
+
+        rows.extend(bench_serve_engine())
+    except Exception as e:  # noqa: BLE001
+        rows.append(("serve/engine/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
     try:
         from benchmarks.fleet import bench_fleet
 

@@ -31,12 +31,12 @@ entry for the call's (shape, dtype, backend) key when one exists.
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.kernels.flash_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import decode_attention, flash_attention
 from repro.kernels.flash_decode.kernel import (
     flash_decode_pallas,
     paged_flash_decode_pallas,
@@ -45,6 +45,7 @@ from repro.kernels.flash_decode.kernel import (
 NEG_INF = -1e30
 PAGED_IMPLS = ("stream", "pallas", "gather")
 DEFAULT_PAGES_PER_PROGRAM = 4
+DEFAULT_PREFILL_CHUNK = 32
 
 
 def decode_attention_auto(
@@ -266,6 +267,110 @@ def paged_decode_attention(
         interpret,
     )
     return out.reshape(b, hq, d)
+
+
+def gather_pages(pool: jnp.ndarray, page_tables: jnp.ndarray) -> jnp.ndarray:
+    """Dense per-sequence view of a page pool.
+
+    ``pool`` is page-major with the page-position axis at index 2 of the
+    gathered tile ((n_pages, ..., page, ...) with one leading page axis);
+    ``page_tables`` is (B, pages_per_seq).  Returns
+    (B, ..., pages_per_seq * page, ...): the contiguous cache view a
+    chunked-prefill flash call attends over.  Positions past a sequence's
+    fill hold stale/zero pages (including the scratch page) and must be
+    masked by the caller via ``kv_lens``."""
+    b, npp = page_tables.shape
+    tile = pool[page_tables]  # (B, npp, ..., page, ...)
+    if pool.ndim == 4:  # (n_pages, Hk, page, d) K/V pools
+        return jnp.moveaxis(tile, 2, 1).reshape(
+            b, pool.shape[1], npp * pool.shape[2], pool.shape[3])
+    if pool.ndim == 3:  # (n_pages, page, r) MLA latent pools
+        return tile.reshape(b, npp * pool.shape[1], pool.shape[2])
+    raise ValueError(f"unsupported pool rank {pool.ndim}")
+
+
+def paged_prefill_attention(
+    q: jnp.ndarray,  # (B, Hq, C, d) one prompt chunk of queries
+    k_pages: jnp.ndarray,  # (n_pages, Hk, page, d) pool incl. this chunk's K
+    v_pages: jnp.ndarray,  # (n_pages, Hk, page, d)
+    kv_lens: jnp.ndarray,  # (B,) valid positions incl. this chunk
+    page_tables: jnp.ndarray,  # (B, pages_per_seq) int32
+    *,
+    q_offset: int,  # absolute position of the chunk's first query (static)
+    sm_scale: Optional[float] = None,
+    block_q: int = 16,
+    block_k: int = 16,
+) -> jnp.ndarray:
+    """Causal chunked-prefill attention over the paged KV pool.
+
+    The chunk's K/V must already be scattered into the pages (scatter then
+    attend, exactly like the decode path); this gathers the whole page-table
+    row to a contiguous view and runs the blocked flash forward with the
+    chunk's absolute query offset.  Bit-identity with a monolithic prefill
+    at the same ``block_k`` holds because (a) key blocks tile absolute
+    positions from 0 regardless of the chunk boundary, (b) each query row's
+    online-softmax accumulation is independent of how queries are blocked,
+    and (c) positions at or past ``kv_lens`` are exact no-ops in the block
+    update.  See DESIGN.md §11."""
+    k_full = gather_pages(k_pages, page_tables)
+    v_full = gather_pages(v_pages, page_tables)
+    return flash_attention(
+        q, k_full, v_full, causal=True, sm_scale=sm_scale,
+        kv_lens=kv_lens.astype(jnp.float32), q_offset=q_offset,
+        block_q=block_q, block_k=block_k)
+
+
+def fold_verify_batch(
+    tokens: jnp.ndarray,  # (B, T) row 0 = pending token, rows 1.. = drafts
+    lengths: jnp.ndarray,  # (B,) committed fill per sequence
+    page_tables: jnp.ndarray,  # (B, pages_per_seq)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fold a (B, T) speculative verify window into a (B*T,) decode batch.
+
+    Row ``s*T + t`` carries draft position ``t`` of sequence ``s``: token
+    ``tokens[s, t]`` at cache position ``lengths[s] + t``, reading sequence
+    ``s``'s page-table row.  Because every decode layer scatters all folded
+    rows' K/V before attending, row ``t`` sees rows ``< t`` of its own
+    sequence through its length mask — one batched target step verifies the
+    whole window, and each row's output is bit-identical to the sequential
+    one-token step that would have produced it (same math per row; extra
+    rows only add exact masked no-ops).  Returns
+    (tokens (B*T,), lengths (B*T,), page_tables (B*T, pages_per_seq))."""
+    b, t = tokens.shape
+    toks = tokens.reshape(b * t)
+    lens = (lengths[:, None] + jnp.arange(t, dtype=lengths.dtype)[None, :]
+            ).reshape(b * t)
+    pts = jnp.repeat(page_tables, t, axis=0)
+    return toks, lens, pts
+
+
+def paged_verify_attention(
+    q: jnp.ndarray,  # (B, T, Hq, d) draft-window queries
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) fill BEFORE the window (row t attends l+t+1)
+    page_tables: jnp.ndarray,  # (B, pages_per_seq)
+    *,
+    sm_scale: Optional[float] = None,
+    impl: str = "stream",
+    pages_per_program: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Multi-query verify over pages: decode attention for T draft positions
+    per sequence in one call, by folding the window into the batch axis with
+    ragged lengths (row t of sequence s attends ``lengths[s] + t + 1``
+    positions).  The fold is exactly ``fold_verify_batch`` minus the token
+    column, so outputs are bit-identical to T sequential decode calls.
+    Returns (B, T, Hq, d)."""
+    b, t, hq, d = q.shape
+    lens = (lengths[:, None] + 1 + jnp.arange(t, dtype=lengths.dtype)[None, :]
+            ).reshape(b * t)
+    pts = jnp.repeat(page_tables, t, axis=0)
+    out = paged_decode_attention(
+        q.reshape(b * t, hq, d), k_pages, v_pages, lens, pts,
+        sm_scale=sm_scale, impl=impl, pages_per_program=pages_per_program,
+        interpret=interpret)
+    return out.reshape(b, t, hq, d)
 
 
 def paged_latent_decode_attention(

@@ -1,9 +1,9 @@
 """repro.kernels.tune — shape-keyed Pallas/jnp kernel autotuner.
 
-A sweep harness plus a persisted config cache covering all four kernel
-families (flash_attention, flash_decode + flash_decode_paged, ssm_scan,
-sdca).  Keys are (family, shape, dtype, backend); values are the measured
-fastest block configs.  See DESIGN.md §10.
+A sweep harness plus a persisted config cache covering every kernel
+family (flash_attention, flash_decode + flash_decode_paged, prefill_chunk,
+ssm_scan, sdca).  Keys are (family, shape, dtype, backend); values are the
+measured fastest block configs.  See DESIGN.md §10.
 
 Public surface:
 

@@ -86,6 +86,18 @@ def estimate(family: str, shape: Dict[str, int], config: Dict[str, int]) -> Cand
         bytes_moved = 2.0 * b * hk * s * d * it
         vmem = (2 * ppp * page * d + g * d + g * ppp * page) * it
         steps = b * hk * _ceil_div(npp, ppp)
+    elif family == "prefill_chunk":
+        p, hk, g = shape["p"], shape["hk"], shape["g"]
+        d, page, npp = shape["d"], shape["page"], shape["npp"]
+        c = config["chunk"]
+        s = npp * page
+        n_chunks = _ceil_div(p, c)
+        # every chunk re-gathers the full page row (the chunked-prefill
+        # bytes tax) and attends c queries against s keys
+        flops = 4.0 * hk * g * p * s * d
+        bytes_moved = (2.0 * n_chunks * hk * s * d + 2.0 * hk * g * p * d) * it
+        vmem = (c * g * d + 2 * 16 * d + 2 * c * 16) * it
+        steps = n_chunks * hk * _ceil_div(c, 16) * _ceil_div(s, 16)
     elif family == "ssm_scan":
         bt, s, dn, n = shape["bt"], shape["s"], shape["dn"], shape["n"]
         chunk = config["chunk"]

@@ -26,7 +26,14 @@ import numpy as np
 from repro.kernels.tune import roofline
 from repro.kernels.tune.cache import ConfigCache, cache_key
 
-FAMILIES = ("flash_attention", "flash_decode", "flash_decode_paged", "ssm_scan", "sdca")
+FAMILIES = (
+    "flash_attention",
+    "flash_decode",
+    "flash_decode_paged",
+    "prefill_chunk",
+    "ssm_scan",
+    "sdca",
+)
 
 # default sweep shapes: "full" targets serving-scale caches, "smoke" keeps
 # the CI sweep to tens of milliseconds
@@ -35,6 +42,7 @@ SWEEP_SHAPES: Dict[str, Dict[str, Dict[str, int]]] = {
         "flash_attention": {"b": 1, "h": 8, "s": 1024, "d": 64},
         "flash_decode": {"b": 4, "h": 8, "s": 512, "d": 64},
         "flash_decode_paged": {"b": 4, "hk": 4, "g": 2, "d": 64, "page": 16, "npp": 128},
+        "prefill_chunk": {"p": 512, "hk": 4, "g": 2, "d": 64, "page": 16, "npp": 64},
         "ssm_scan": {"bt": 2, "s": 512, "dn": 64, "n": 16},
         "sdca": {"m": 4, "nl": 256, "d": 64, "h": 256},
     },
@@ -42,6 +50,7 @@ SWEEP_SHAPES: Dict[str, Dict[str, Dict[str, int]]] = {
         "flash_attention": {"b": 1, "h": 2, "s": 64, "d": 16},
         "flash_decode": {"b": 2, "h": 2, "s": 64, "d": 16},
         "flash_decode_paged": {"b": 2, "hk": 2, "g": 2, "d": 16, "page": 8, "npp": 8},
+        "prefill_chunk": {"p": 32, "hk": 2, "g": 2, "d": 16, "page": 8, "npp": 8},
         "ssm_scan": {"bt": 1, "s": 64, "dn": 8, "n": 4},
         "sdca": {"m": 2, "nl": 32, "d": 16, "h": 32},
     },
@@ -84,6 +93,9 @@ def candidates_for(family: str, shape: Dict[str, int]) -> List[Dict[str, int]]:
     if family == "flash_decode_paged":
         npp = shape["npp"]
         return [{"pages_per_program": p} for p in _pow2_range(1, 128) if p <= npp]
+    if family == "prefill_chunk":
+        p = shape["p"]
+        return [{"chunk": c} for c in _pow2_range(16, 512) if c <= max(p, 16)]
     if family == "ssm_scan":
         s = shape["s"]
         return [{"chunk": c} for c in _pow2_range(16, 256) if c <= max(s, 16)]
@@ -152,6 +164,44 @@ def _case_flash_decode_paged(shape, dtype):
     return build
 
 
+def _case_prefill_chunk(shape, dtype):
+    """Whole-prompt chunked prefill at chunk width C: ceil(p/C) calls of the
+    paged-prefill flash path (scatter chunk K/V, gather the page row, attend
+    with static q_offset).  Small chunks pay repeated page-row gathers and
+    dispatch; large chunks pay step latency — the tunable is that knee.  The
+    timed fn drives every chunk so candidates are compared on full-prompt
+    cost, not per-call cost."""
+    from repro.kernels.flash_decode.ops import paged_prefill_attention
+
+    p, hk, g, d = shape["p"], shape["hk"], shape["g"], shape["d"]
+    page, npp = shape["page"], shape["npp"]
+    n_pages = npp + 1
+    rng = np.random.RandomState(5)
+    kp = jnp.asarray(rng.randn(n_pages, hk, page, d), dtype)
+    vp = jnp.asarray(rng.randn(n_pages, hk, page, d), dtype)
+    pt = jnp.asarray(rng.permutation(npp)[None] + 1, jnp.int32)
+
+    def build(config):
+        c = config["chunk"]
+        calls = []
+        for i in range(-(-p // c)):
+            s0 = i * c
+            q = jnp.asarray(rng.randn(1, hk * g, c, d), dtype)
+            lens = jnp.asarray([min(s0 + c, p)], jnp.int32)
+            fn = jax.jit(functools.partial(paged_prefill_attention, q_offset=s0))
+            calls.append((fn, q, lens))
+
+        def run(kp_, vp_, pt_):
+            out = None
+            for fn, q, lens in calls:
+                out = fn(q, kp_, vp_, lens, pt_)
+            return out
+
+        return run, (kp, vp, pt)
+
+    return build
+
+
 def _case_ssm_scan(shape, dtype):
     from repro.kernels.ssm_scan.ops import selective_scan
 
@@ -196,6 +246,7 @@ _CASES = {
     "flash_attention": _case_flash_attention,
     "flash_decode": _case_flash_decode,
     "flash_decode_paged": _case_flash_decode_paged,
+    "prefill_chunk": _case_prefill_chunk,
     "ssm_scan": _case_ssm_scan,
     "sdca": _case_sdca,
 }

@@ -133,6 +133,25 @@ def _verify_prefix_reuse(arch: str, smoke: bool, eng: ServeEngine,
     return shared > 0 and exact
 
 
+def _resolve_prefill_chunk(value: Optional[int], smoke: bool) -> Optional[int]:
+    """``--prefill-chunk -1`` -> the autotuned chunk size for the matching
+    sweep preset; falls back to the built-in default on a cache miss."""
+    if value is None or value >= 0:
+        return value
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode.ops import DEFAULT_PREFILL_CHUNK
+    from repro.kernels.tune import SWEEP_SHAPES, lookup
+
+    preset = "smoke" if smoke else "full"
+    cfg = lookup("prefill_chunk", SWEEP_SHAPES[preset]["prefill_chunk"],
+                 jnp.float32)
+    chunk = int(cfg["chunk"]) if cfg else DEFAULT_PREFILL_CHUNK
+    print(f"prefill chunk: auto -> {chunk} "
+          f"({'tuned' if cfg else 'untuned default'})")
+    return chunk
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
@@ -150,6 +169,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    metavar="TOKENS",
+                    help="chunked prefill: per-step prompt-token budget "
+                         "shared with the decode batch (-1 picks the "
+                         "autotuned chunk size; default off)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decode: draft up to K tokens per "
+                         "sequence per step from an n-gram/prefix-cache "
+                         "proposer, verified in one batched target step "
+                         "(default 0 = off)")
     ap.add_argument("--paged-impl", default="stream",
                     choices=["stream", "pallas", "gather"],
                     help="paged decode implementation (bit-identical; "
@@ -178,10 +207,12 @@ def main():
               f"decode {res['decode_tok_per_s']:.1f} tok/s")
         return
 
+    prefill_chunk = _resolve_prefill_chunk(args.prefill_chunk, args.smoke)
     eng = ServeEngine(args.arch, smoke=args.smoke, max_batch=args.max_batch,
                       page_size=args.page_size,
                       max_seq=64 + args.page_size * 2, seed=args.seed,
-                      paged_impl=args.paged_impl)
+                      paged_impl=args.paged_impl,
+                      prefill_chunk=prefill_chunk, speculate=args.speculate)
     reqs = _mixed_trace(eng, args.requests, args.seed)
     stats = eng.run()
     done = [r for r in reqs if r.finished_step >= 0]
@@ -191,6 +222,34 @@ def main():
           f"prefix hits {stats.get('prefix_hits', 0)})")
     joins = sum(1 for r in reqs if r.admitted_step > 0)
     print(f"join-on-arrival: {joins} requests joined a running batch")
+    if "join_to_first_token_p50" in stats:
+        print(f"join-to-first-token: p50 {stats['join_to_first_token_p50']:.1f}"
+              f" p99 {stats['join_to_first_token_p99']:.1f} steps")
+
+    if prefill_chunk is not None or args.speculate:
+        if prefill_chunk is not None:
+            print(f"chunked prefill: {stats.get('prefill_chunks', 0)} chunk "
+                  f"steps / {stats.get('prefill_chunk_tokens', 0)} prompt "
+                  f"tokens at budget {prefill_chunk}")
+        if args.speculate:
+            print(f"speculation: accept rate "
+                  f"{stats.get('spec_accept_rate', 0.0):.2f} "
+                  f"({stats.get('draft_accepted', 0)}/"
+                  f"{stats.get('draft_proposed', 0)} drafted tokens)")
+        base = ServeEngine(args.arch, smoke=args.smoke,
+                           max_batch=args.max_batch,
+                           page_size=args.page_size,
+                           max_seq=64 + args.page_size * 2, seed=args.seed,
+                           paged_impl=args.paged_impl)
+        base_reqs = _mixed_trace(base, args.requests, args.seed)
+        base.run()
+        identical = all(r.generated == b.generated
+                        for r, b in zip(reqs, base_reqs))
+        print(f"chunked+speculative vs one-token baseline: "
+              f"bit_identical={'yes' if identical else 'NO'}")
+        if not identical:
+            print("FAIL: chunked/speculative outputs diverge from baseline")
+            sys.exit(1)
 
     planner = CapacityPlanner()
     if args.tune_cache:

@@ -14,7 +14,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.kernels.flash_attention.ops import decode_attention, flash_attention
-from repro.kernels.flash_decode.ops import paged_decode_attention
+from repro.kernels.flash_decode.ops import (
+    paged_decode_attention,
+    paged_prefill_attention,
+)
 from repro.models.layers import apply_rope, cast_to, rms_norm
 from repro.models.param import ann
 
@@ -159,6 +162,46 @@ def apply_attention_decode_paged(
     y = out.reshape(b, cfg.n_heads * cfg.head_dim) @ cast_to(
         p["wo"], cfg.dtype)
     return y[:, None, :], {"k": k_pages, "v": v_pages}
+
+
+def apply_attention_prefill_paged(
+    p: Dict,
+    x: jnp.ndarray,  # (1, C, d) one prompt chunk, padded to C tokens
+    cfg: ArchConfig,
+    cache: Dict,  # k/v pages: (n_pages, Hk, page_size, hd)
+    n_valid: jnp.ndarray,  # () valid tokens in this chunk (<= C)
+    page_tables: jnp.ndarray,  # (1, pages_per_seq)
+    *,
+    s0: int,  # static absolute position of the chunk's first token
+    page_size: int,
+    scratch_page: int = 0,
+    block_q: int = 16,
+    block_k: int = 16,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Chunked paged prefill: scatter the chunk's K/V into the request's
+    pages at absolute positions ``s0 + i``, then run causally-masked flash
+    over the gathered page row with a static ``q_offset`` so the key
+    blocking starts from absolute position 0 — bitwise the block schedule
+    of a monolithic prefill.  Padded chunk tail tokens are routed to the
+    scratch page and masked by ``kv_lens``; real positions past the prompt
+    are only ever read after being overwritten by a later chunk/decode."""
+    c = x.shape[1]
+    pos = s0 + jnp.arange(c, dtype=jnp.int32)
+    positions = pos[None]  # (1, C)
+    q, k, v = _project_qkv(p, x, cfg, positions, None)
+    valid = jnp.arange(c) < n_valid
+    page_idx = jnp.clip(pos // page_size, 0, page_tables.shape[1] - 1)
+    pid = jnp.where(valid, page_tables[0, page_idx], scratch_page)
+    offset = pos % page_size
+    k_pages = cache["k"].at[pid, :, offset, :].set(k[0].astype(cache["k"].dtype))
+    v_pages = cache["v"].at[pid, :, offset, :].set(v[0].astype(cache["v"].dtype))
+    kv_lens = (s0 + n_valid)[None].astype(jnp.int32)  # (1,)
+    out = paged_prefill_attention(
+        q.transpose(0, 2, 1, 3), k_pages, v_pages, kv_lens, page_tables,
+        q_offset=s0, block_q=block_q, block_k=block_k)  # (1, H, C, hd)
+    y = out.transpose(0, 2, 1, 3).reshape(1, c, cfg.n_heads * cfg.head_dim)
+    y = y @ cast_to(p["wo"], cfg.dtype)
+    return y, {"k": k_pages, "v": v_pages}
 
 
 def apply_attention_decode(

@@ -138,6 +138,47 @@ def apply_block_decode_paged(
     return x, new_cache
 
 
+def apply_block_prefill_paged(
+    p: Dict,
+    x: jnp.ndarray,  # (1, C, d) one prompt chunk
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    rt: Runtime,
+    cache: Dict,
+    n_valid: jnp.ndarray,  # () valid tokens in this chunk
+    page_tables: jnp.ndarray,  # (1, pages_per_seq)
+    *,
+    s0: int,  # static absolute position of the chunk's first token
+) -> Tuple[jnp.ndarray, Dict]:
+    """Chunked-prefill step against a paged cache.  Attention-only archs:
+    mamba's slot-major recurrent state has no paged/positional form, so the
+    engine gates chunked prefill to attn mixers (see ServeEngine)."""
+    if spec.mixer != "attn":
+        raise NotImplementedError(
+            "chunked paged prefill supports attn mixers only")
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if _uses_mla(cfg):
+        y, new_cache = mla_mod.apply_mla_prefill_paged(
+            p["mixer"], h, cfg, cache, n_valid, page_tables,
+            s0=s0, page_size=rt.page_size, block_q=rt.block_q,
+            block_k=rt.block_k)
+    else:
+        y, new_cache = attn_mod.apply_attention_prefill_paged(
+            p["mixer"], h, cfg, cache, n_valid, page_tables,
+            s0=s0, page_size=rt.page_size, block_q=rt.block_q,
+            block_k=rt.block_k)
+    x = x + y
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            y2 = apply_mlp(p["ffn"], h2, cfg.dtype, rt.constrain_fn)
+        else:
+            y2, _ = moe_mod.apply_moe(
+                p["ffn"], h2, cfg, train=False, mesh=rt.mesh, rules=rt.rules)
+        x = x + y2
+    return x, new_cache
+
+
 def apply_block_decode(
     p: Dict,
     x: jnp.ndarray,  # (B, 1, d)

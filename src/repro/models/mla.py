@@ -31,7 +31,10 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_decode.ops import paged_latent_decode_attention
+from repro.kernels.flash_decode.ops import (
+    gather_pages,
+    paged_latent_decode_attention,
+)
 from repro.models.layers import apply_rope, cast_to, rms_norm
 from repro.models.param import ann
 
@@ -231,6 +234,62 @@ def apply_mla_decode_paged(
     out = jnp.einsum("bhr,rhe->bhe", ctx_lat.astype(dt), wv)  # (B, H, v)
     y = out.reshape(b, h * m.v_head_dim) @ cast_to(p["wo"], dt)
     return y[:, None, :], new_cache
+
+
+def apply_mla_prefill_paged(
+    p: Dict,
+    x: jnp.ndarray,  # (1, C, d) one prompt chunk, padded to C tokens
+    cfg: ArchConfig,
+    cache: Dict,  # latent pages: ckv (n_pages, page, r), kpe (n_pages, page, rope)
+    n_valid: jnp.ndarray,  # () valid tokens in this chunk (<= C)
+    page_tables: jnp.ndarray,  # (1, pages_per_seq)
+    *,
+    s0: int,  # static absolute position of the chunk's first token
+    page_size: int,
+    scratch_page: int = 0,
+    block_q: int = 16,
+    block_k: int = 16,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Chunked paged MLA prefill: scatter the chunk's (c_kv, k_pe) into the
+    latent pages, gather the request's full latent row, re-expand K/V with
+    ``wkv_b`` (row-stable matmul, so earlier positions are bitwise those of
+    a monolithic prefill), and run causal flash with static ``q_offset``.
+    Padded chunk tail tokens are routed to the scratch page."""
+    m, dt = cfg.mla, cfg.dtype
+    c, h = x.shape[1], cfg.n_heads
+    pos = s0 + jnp.arange(c, dtype=jnp.int32)
+    positions = pos[None]  # (1, C)
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)          # (1,C,H,·)
+    ckv_new, kpe_new = _mla_kv_latent(p, x, cfg, positions)
+    valid = jnp.arange(c) < n_valid
+    page_idx = jnp.clip(pos // page_size, 0, page_tables.shape[1] - 1)
+    pid = jnp.where(valid, page_tables[0, page_idx], scratch_page)
+    offset = pos % page_size
+    ckv_pages = cache["ckv"].at[pid, offset, :].set(
+        ckv_new[0].astype(cache["ckv"].dtype))
+    kpe_pages = cache["kpe"].at[pid, offset, :].set(
+        kpe_new[0].astype(cache["kpe"].dtype))
+    new_cache = {"ckv": ckv_pages, "kpe": kpe_pages}
+    ckv_full = gather_pages(ckv_pages, page_tables)  # (1, S, r)
+    kpe_full = gather_pages(kpe_pages, page_tables)  # (1, S, rope)
+    kv = (ckv_full @ cast_to(p["wkv_b"], dt)).reshape(
+        1, ckv_full.shape[1], h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = kv[..., : m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe_full[:, :, None, :],
+                                  (*k_nope.shape[:3], m.qk_rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    kv_lens = (s0 + n_valid)[None].astype(jnp.float32)  # (1,)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        sm_scale=1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim),
+        kv_lens=kv_lens, q_offset=s0, block_q=block_q, block_k=block_k)
+    out = out.transpose(0, 2, 1, 3)  # (1,C,H,v)
+    y = out.reshape(1, c, h * m.v_head_dim) @ cast_to(p["wo"], dt)
+    return y, new_cache
 
 
 def _mla_decode_attn(

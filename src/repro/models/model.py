@@ -212,11 +212,18 @@ class LM:
         return {"head": head, "periods": period}
 
     def decode_step(self, params, tokens: jnp.ndarray, lengths: jnp.ndarray,
-                    cache: Dict):
+                    cache: Dict, frontend_embed: Optional[jnp.ndarray] = None):
         """tokens (B,) int32; lengths (B,) current cache fill.
+        ``frontend_embed`` (B, d_model), when given, is projected through
+        ``frontend_proj`` and decoded in place of the token embedding —
+        teacher-forcing one frontend position (``tokens`` is ignored).
         Returns (logits (B,V), new_cache)."""
         cfg, rt = self.cfg, self.rt
-        x = embed_tokens(params["embed"], tokens[:, None], cfg.dtype)  # (B,1,d)
+        if frontend_embed is not None:
+            x = cast_to(frontend_embed[:, None], cfg.dtype) @ cast_to(
+                params["frontend_proj"], cfg.dtype)  # (B,1,d)
+        else:
+            x = embed_tokens(params["embed"], tokens[:, None], cfg.dtype)
         new_head = []
         for hp, hc in zip(params.get("head_layers", ()), cache["head"]):
             x, c = blocks_mod.apply_block_decode(
@@ -238,6 +245,45 @@ class LM:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
         logits = lm_logits(head, x[:, 0], cfg.dtype)
+        return logits, {"head": tuple(new_head), "periods": new_periods}
+
+    def prefill_chunk(self, params, tokens: jnp.ndarray,
+                      n_valid: jnp.ndarray, cache: Dict,
+                      page_tables: jnp.ndarray, *, s0: int):
+        """One chunk of a chunked paged prefill (serving; attn-only archs).
+
+        ``tokens`` (1, C) int32 is the chunk padded to the fixed chunk width
+        C (fixed jit shape); ``n_valid`` () is how many of those are real;
+        ``s0`` (static) is the absolute position of the chunk's first token.
+        Each layer scatters the chunk's K/V (or latent) into the request's
+        pages then attends causally with ``q_offset=s0`` over the gathered
+        page row, so after the final chunk the pages and the last-position
+        logits are bitwise those of a monolithic prefill (see DESIGN.md §11).
+        Returns (logits (1, C, V), new_cache)."""
+        cfg, rt = self.cfg, self.rt
+        x = embed_tokens(params["embed"], tokens, cfg.dtype)  # (1, C, d)
+        new_head = []
+        for hp, hc in zip(params.get("head_layers", ()), cache["head"]):
+            x, c = blocks_mod.apply_block_prefill_paged(
+                hp, x, cfg, self._head_spec(), rt, hc, n_valid, page_tables,
+                s0=s0)
+            new_head.append(c)
+
+        def period_fn(x, inputs):
+            period_params, cache_in = inputs
+            new_caches = {}
+            for i, spec in enumerate(cfg.period):
+                x, c = blocks_mod.apply_block_prefill_paged(
+                    period_params[f"pos{i}"], x, cfg, spec, rt,
+                    cache_in[f"pos{i}"], n_valid, page_tables, s0=s0)
+                new_caches[f"pos{i}"] = c
+            return x, new_caches
+
+        x, new_periods = lax.scan(period_fn, x,
+                                  (params["periods"], cache["periods"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = lm_logits(head, x, cfg.dtype)  # (1, C, V)
         return logits, {"head": tuple(new_head), "periods": new_periods}
 
     def decode_step_paged(self, params, tokens: jnp.ndarray,

@@ -78,15 +78,19 @@ def _capacity(t: int, moe, train: bool) -> int:
     """Per-expert token capacity for a dispatch over ``t`` tokens.
 
     Training uses the standard Switch/GShard formula (overflow drops are the
-    price of balanced static shapes).  Inference floors the capacity so
-    small-t dispatches (decode steps, tiny eval batches) are effectively
-    dropless — with t=2 decode tokens the formula gives capacity 1 and two
-    tokens picking the same expert silently diverge from prefill.  The
-    ``min(t, ...)`` bound keeps large-t prefill buffers at the formula size."""
+    price of balanced static shapes).  Inference is fully dropless
+    (``cap = t``, the worst case of every token routing to one expert): a
+    token's output then never depends on which other tokens share its
+    dispatch, so the same token at the same position produces bit-identical
+    results whether it is processed by a B-row decode step, a B*T-row
+    speculative verify step, or a prefill chunk of any size — the invariant
+    the serve engine's spec-decode and chunked-prefill paths rely on.  (The
+    previous eval rule, ``min(t, max(cap, 16))``, was dropless only for
+    t <= 16 and silently coupled larger eval dispatches.)"""
+    if not train:
+        return max(t, 1)
     cap = int(math.ceil(t * moe.top_k / moe.n_routed_experts
                         * moe.capacity_factor))
-    if not train:
-        cap = min(t, max(cap, 16))
     return max(cap, 1)
 
 

@@ -2,20 +2,37 @@
 
 One fixed-shape jitted decode step serves every request: each decode slot
 contributes one token per step, idle slots point at the scratch page, and
-requests join (after a batch-1 prefill writes their pages) or leave between
-steps without draining the batch.  Greedy decoding only.
+requests join (after a prefill writes their pages) or leave between steps
+without draining the batch.  Greedy decoding only.
+
+Two optional step-loop extensions (attention-only archs; see DESIGN.md §11):
+
+* **Chunked prefill** (``prefill_chunk=C``): prompts stream into their pages
+  ``C`` tokens per engine step instead of one monolithic batch-1 prefill, so
+  a burst of long prompts no longer stalls the running decode batch and
+  join-to-first-token p99 is bounded by ``ceil(P/C)`` steps rather than one
+  arbitrarily long prefill.  Each chunk is causally masked with a static
+  ``q_offset`` so the final pages and logits are bitwise a monolithic
+  prefill's.
+* **Speculative multi-token decode** (``speculate=k``): an n-gram /
+  prefix-cache proposer (``repro.serve.speculate``) drafts up to ``k``
+  tokens per slot, verified by ONE batched target step over the paged pools
+  (the decode jit retraced at ``max_batch*(k+1)`` folded rows).  The
+  accept-longest-prefix rule commits exactly the tokens greedy one-at-a-time
+  decode would emit — drafts change step count, never output bits.
 
 Time is measured in decode steps; a request's ``arrival_step`` gates its
 admission, which keeps traces deterministic.  Per-step telemetry
-``(active_batch, step_seconds)`` feeds the ``CapacityPlanner``
-(``repro.serve.planner``) — the serve-side analogue of the training f(m)
-loop.
+``(active_batch, step_seconds, kind, committed)`` feeds the
+``CapacityPlanner`` (``repro.serve.planner``) — the serve-side analogue of
+the training f(m) loop.
 
 Determinism notes: with a dense architecture every slot's computation is
 independent of the other slots' contents, so a request's token trajectory is
 bit-identical whether it runs alone or joins a busy batch of the same shape
-(``max_batch`` and page geometry fixed).  MoE architectures couple slots
-through expert capacity and do not carry this guarantee.
+(``max_batch`` and page geometry fixed).  MoE eval is dropless (capacity =
+tokens, see models/moe.py), so per-token expert outputs are independent of
+the dispatch size and the guarantee extends to folded verify batches.
 """
 
 from __future__ import annotations
@@ -39,7 +56,8 @@ from repro.serve.cache import (
 )
 from repro.serve.paging import SCRATCH_PAGE, PagePool
 from repro.serve.prefix import PrefixCache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.speculate import NgramProposer
 
 
 class ServeEngine:
@@ -57,8 +75,21 @@ class ServeEngine:
         collect_logits: bool = False,
         rt: Optional[Runtime] = None,
         paged_impl: Optional[str] = None,
+        prefill_chunk: Optional[int] = None,
+        speculate: int = 0,
+        draft_ngram: int = 3,
     ):
         self.cfg = self.config_for(arch, smoke)
+        if speculate < 0:
+            raise ValueError(f"speculate must be >= 0, got {speculate}")
+        if (prefill_chunk is not None or speculate) and any(
+            spec.mixer != "attn" for spec in self.cfg.period
+        ):
+            raise ValueError(
+                "chunked prefill / speculative decode require attention-only "
+                f"architectures; {self.cfg.name} has recurrent-state layers "
+                "whose slot-major cache has no paged/positional form"
+            )
         self.seed = seed
         # block_q = block_k = 16 pins the flash-attention blocking: the
         # kernel clamps blocks to min(block, max(seq, 16)), so 16 is the one
@@ -95,11 +126,19 @@ class ServeEngine:
             num_pages = 1 + max_batch * self.pages_per_seq
         self.pool = PagePool(num_pages, page_size)
         self.prefix = PrefixCache(page_size) if prefix_caching else None
+        self.prefill_chunk = prefill_chunk
+        self.speculate = speculate
+        self.proposer = (
+            NgramProposer(draft_ngram, prefix_cache=self.prefix)
+            if speculate
+            else None
+        )
         self.scheduler = Scheduler(
             max_batch,
             self.pool,
             prefix_cache=self.prefix,
             n_frontend_tokens=self.cfg.n_frontend_tokens,
+            prefill_chunk=prefill_chunk,
         )
         self.collect_logits = collect_logits
         self.axes = self.lm.cache_axes()
@@ -120,6 +159,13 @@ class ServeEngine:
         self.next_tokens = np.zeros(max_batch, np.int32)
         self._prefill = jax.jit(self.lm.prefill)
         self._decode = jax.jit(self.lm.decode_step_paged, donate_argnums=(3,))
+        # chunk width is static (fixed jit shape); s0 is static too because
+        # the flash q_offset feeds the compile-time causal mask — the jit
+        # cache is keyed per distinct chunk start, a bounded set (multiples
+        # of the chunk width offset by page-aligned shared-prefix starts)
+        self._chunk = jax.jit(
+            self.lm.prefill_chunk, static_argnames=("s0",), donate_argnums=(3,)
+        )
         self.step_count = 0
         self._rid = 0
         self.telemetry: List[Dict] = []
@@ -200,16 +246,87 @@ class ServeEngine:
                     snapshot_state(self.cache, self.axes, slot),
                     self.pool,
                 )
+        self._activate(req, logits, n_front)
+
+    def _activate(self, req: Request, logits: np.ndarray, n_front: int) -> None:
+        """Seed the first token from prefill logits and arm the decode slot."""
+        slot = req.slot
         tok = int(np.argmax(logits))
         req.generated.append(tok)
         if req.logits_trace is not None:
             req.logits_trace.append(np.asarray(logits, np.float32).copy())
+        req.state = RequestState.RUNNING
+        req.first_token_step = self.step_count
         self.lengths[slot] = len(req.prompt) + n_front
         row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
         row[: len(req.page_ids)] = req.page_ids
         self.page_tables[slot] = row
         self.page_tables_dev = self.page_tables_dev.at[slot].set(jnp.asarray(row))
         self.next_tokens[slot] = tok
+
+    # ------------------------------------------------------------------
+    def _use_chunked(self, req: Request) -> bool:
+        """Chunked prefill applies when there is new prompt to stream in:
+        skipped prefills are free, frontend embeds use the legacy path, and
+        an all-shared prompt head falls back to the (cheap) full prefill so
+        the last-token logits exist to seed decode."""
+        return (
+            self.prefill_chunk is not None
+            and req.frontend_embeds is None
+            and not req.prefill_skipped
+            and req.n_shared_pages * self.page_size < len(req.prompt)
+        )
+
+    def _prefill_chunk_step(self, req: Request, n_tokens: int) -> None:
+        """Run one chunk of ``req``'s prompt through the paged stack.  While
+        PREFILLING the slot's host page-table row stays at SCRATCH (the slot
+        is invisible to decode/verify); the real row is passed straight to
+        the chunk jit.  The final chunk registers prefix pages and activates
+        the slot."""
+        slot = req.slot
+        s0 = req.prefill_pos
+        c = self.prefill_chunk
+        chunk = np.zeros(c, np.int32)
+        chunk[:n_tokens] = req.prompt[s0: s0 + n_tokens]
+        row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
+        row[: len(req.page_ids)] = req.page_ids
+        t0 = time.perf_counter()
+        logits_dev, self.cache = self._chunk(
+            self.params,
+            jnp.asarray(chunk)[None],
+            jnp.int32(n_tokens),
+            self.cache,
+            jnp.asarray(row)[None],
+            s0=s0,
+        )
+        logits_dev.block_until_ready()
+        dt = time.perf_counter() - t0
+        req.prefill_s += dt
+        req.prefill_pos += n_tokens
+        self.telemetry.append(
+            {
+                "step": self.step_count,
+                "batch": 0,
+                "step_s": dt,
+                "kind": "prefill",
+                "prefill_tokens": n_tokens,
+            }
+        )
+        if req.prefill_pos >= len(req.prompt):
+            logits = np.asarray(logits_dev[0, n_tokens - 1])
+            if self.prefix is not None:
+                n_prompt_pages = -(-len(req.prompt) // self.page_size)
+                self.prefix.register(
+                    req.prompt, req.page_ids[:n_prompt_pages], self.pool
+                )
+                self.prefix.register_full(
+                    req.prompt,
+                    req.page_ids[: len(req.prompt) // self.page_size],
+                    logits,
+                    snapshot_state(self.cache, self.axes, slot),
+                    self.pool,
+                )
+            self._activate(req, logits, 0)
 
     def _release_slot(self, slot: int) -> None:
         self.lengths[slot] = 0
@@ -219,18 +336,35 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """Admit arrived requests, run one batched decode step, retire
-        finished requests.  Returns the number of active requests served."""
+        """One unified engine step: admit arrived requests, advance chunked
+        prefill within its token budget, then run one batched decode (or
+        draft-verify) step and retire finished requests.  Returns the number
+        of requests that contributed decode tokens."""
         for req in self.scheduler.admit_ready(self.step_count):
-            self._admit(req)
-            if req.done:  # max_new_tokens == 1: prefill already finished it
+            if self._use_chunked(req):
+                req.state = RequestState.PREFILLING
+                req.prefill_pos = req.n_shared_pages * self.page_size
+            else:
+                self._admit(req)
+                if req.done:  # max_new_tokens == 1: prefill already finished
+                    slot = req.slot
+                    self.scheduler.finish(req, self.step_count)
+                    self._release_slot(slot)
+        for req, take in self.scheduler.plan_prefill():
+            self._prefill_chunk_step(req, take)
+            if req.state is RequestState.RUNNING and req.done:
                 slot = req.slot
                 self.scheduler.finish(req, self.step_count)
                 self._release_slot(slot)
-        active = self.scheduler.active
-        if not active:
+        decoding = self.scheduler.decoding
+        if not decoding:
             self.step_count += 1
             return 0
+        drafts = self._propose_drafts(decoding) if self.speculate else None
+        if drafts is not None:
+            n = self._verify_step(decoding, drafts)
+            self.step_count += 1
+            return n
         t0 = time.perf_counter()
         logits_dev, self.cache = self._decode(
             self.params,
@@ -242,9 +376,15 @@ class ServeEngine:
         logits_np = np.asarray(logits_dev)
         dt = time.perf_counter() - t0
         self.telemetry.append(
-            {"step": self.step_count, "batch": len(active), "step_s": dt}
+            {
+                "step": self.step_count,
+                "batch": len(decoding),
+                "step_s": dt,
+                "kind": "decode",
+                "committed": len(decoding),
+            }
         )
-        for req in active:
+        for req in decoding:
             slot = req.slot
             tok = int(np.argmax(logits_np[slot]))
             req.generated.append(tok)
@@ -257,7 +397,110 @@ class ServeEngine:
                 self.scheduler.finish(req, self.step_count)
                 self._release_slot(slot_to_clear)
         self.step_count += 1
-        return len(active)
+        return len(decoding)
+
+    # ------------------------------------------------------------------
+    def _propose_drafts(self, decoding) -> Optional[Dict[int, np.ndarray]]:
+        """Draft tokens per slot (``None`` means run the plain decode step).
+        Draft count is capped at ``remaining - 1`` so no speculative write
+        lands past the position the baseline's final decode step would use.
+
+        A verify step runs ``max_batch * (k+1)`` rows where plain decode
+        runs ``max_batch`` — roughly a 2x wall premium at serving shapes —
+        so sparse drafts lose even when they are right.  The step is only
+        worth it when drafting is dense (every slot deep in a predictable
+        stretch, e.g. looping or prompt-copying output), so the gate
+        requires two full-depth drafts' worth of tokens per active slot
+        before paying for verification; anything less decodes normally and
+        costs speculation nothing."""
+        drafts: Dict[int, np.ndarray] = {}
+        total = 0
+        for req in decoding:
+            remaining = req.max_new_tokens - len(req.generated)
+            cap = min(self.speculate, remaining - 1)
+            if cap > 0:
+                ctx = np.concatenate(
+                    [req.prompt, np.asarray(req.generated, np.int32)]
+                )
+                d = self.proposer.propose(ctx, cap, slot=req.slot)
+            else:
+                d = np.empty(0, np.int32)
+            drafts[req.slot] = d
+            total += len(d)
+        gate = len(decoding) * min(self.speculate, 2)
+        return drafts if total >= max(gate, 1) else None
+
+    def _verify_step(self, decoding, drafts: Dict[int, np.ndarray]) -> int:
+        """One batched draft-verify step: fold each slot to ``k+1`` rows of
+        the regular paged decode step (row t = pending token if t=0 else
+        draft t, at length L+t, sharing the slot's page-table row), then
+        commit the longest accepted prefix per slot.  Row t's logits are the
+        target model's next-token distribution after consuming the pending
+        token and drafts 1..t — bitwise the sequential decode's logits
+        whenever those drafts match what it would have committed, which is
+        exactly the accept condition (DESIGN.md §11).  Padded rows get
+        length 0 and an all-scratch page-table row so they can neither read
+        nor clobber live pages."""
+        t_rows = self.speculate + 1
+        n_rows = self.max_batch * t_rows
+        toks = np.zeros(n_rows, np.int32)
+        lens = np.zeros(n_rows, np.int32)
+        pts = np.full((n_rows, self.pages_per_seq), SCRATCH_PAGE, np.int32)
+        for req in decoding:
+            s = req.slot
+            d = drafts[s]
+            base = s * t_rows
+            toks[base] = self.next_tokens[s]
+            toks[base + 1: base + 1 + len(d)] = d
+            lens[base: base + 1 + len(d)] = self.lengths[s] + np.arange(
+                len(d) + 1
+            )
+            pts[base: base + 1 + len(d)] = self.page_tables[s]
+        t0 = time.perf_counter()
+        logits_dev, self.cache = self._decode(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray(lens),
+            self.cache,
+            jnp.asarray(pts),
+        )
+        logits_np = np.asarray(logits_dev)
+        dt = time.perf_counter() - t0
+        total_committed = 0
+        total_drafted = 0
+        for req in decoding:
+            s = req.slot
+            d = drafts[s]
+            rows = logits_np[s * t_rows: (s + 1) * t_rows]
+            committed = [int(np.argmax(rows[0]))]
+            for i in range(len(d)):
+                if int(d[i]) != committed[i]:
+                    break
+                committed.append(int(np.argmax(rows[i + 1])))
+            self.proposer.record(len(d), len(committed) - 1)
+            for i, tok in enumerate(committed):
+                req.generated.append(tok)
+                if req.logits_trace is not None:
+                    req.logits_trace.append(rows[i].astype(np.float32).copy())
+            self.lengths[s] += len(committed)
+            self.next_tokens[s] = committed[-1]
+            total_committed += len(committed)
+            total_drafted += len(d)
+            if req.done:
+                slot = req.slot
+                self.scheduler.finish(req, self.step_count)
+                self._release_slot(slot)
+        self.telemetry.append(
+            {
+                "step": self.step_count,
+                "batch": len(decoding),
+                "step_s": dt,
+                "kind": "verify",
+                "committed": total_committed,
+                "drafted": total_drafted,
+            }
+        )
+        return len(decoding)
 
     def run(self, max_steps: int = 100_000) -> Dict:
         """Drive steps until every submitted request has finished."""
@@ -270,14 +513,15 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def stats(self) -> Dict:
         steps = [t for t in self.telemetry if t["batch"] > 0]
-        tok = sum(t["batch"] for t in steps)
+        tok = sum(t.get("committed", t["batch"]) for t in steps)
         busy = sum(t["step_s"] for t in steps)
+        batch_tok = sum(t["batch"] for t in steps)
         out: Dict = {
             "requests_finished": len(self.scheduler.finished),
             "decode_steps": len(steps),
             "decode_tokens": tok,
             "decode_tok_per_s": tok / busy if busy else 0.0,
-            "mean_batch": tok / len(steps) if steps else 0.0,
+            "mean_batch": batch_tok / len(steps) if steps else 0.0,
             "pages_in_use": self.pool.pages_in_use,
             "free_pages": self.pool.free_pages,
         }
@@ -285,4 +529,22 @@ class ServeEngine:
             out["prefix_hits"] = self.prefix.hits
             out["prefix_pages_shared"] = self.prefix.pages_shared
             out["prefills_skipped"] = self.prefix.prefills_skipped
+        if self.prefill_chunk is not None:
+            chunk_rows = [t for t in self.telemetry if t.get("kind") == "prefill"]
+            out["prefill_chunks"] = len(chunk_rows)
+            out["prefill_chunk_tokens"] = sum(
+                t["prefill_tokens"] for t in chunk_rows
+            )
+        if self.proposer is not None:
+            out["draft_proposed"] = self.proposer.proposed_tokens
+            out["draft_accepted"] = self.proposer.accepted_tokens
+            out["spec_accept_rate"] = self.proposer.accept_rate
+        joins = [
+            r.first_token_step - r.arrival_step
+            for r in self.scheduler.finished
+            if r.first_token_step >= 0
+        ]
+        if joins:
+            out["join_to_first_token_p50"] = float(np.percentile(joins, 50))
+            out["join_to_first_token_p99"] = float(np.percentile(joins, 99))
         return out

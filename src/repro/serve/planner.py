@@ -57,16 +57,53 @@ class CapacityPlanner:
         self.observations: List[ServeObservation] = []
         self.step_model = ErnestModel(term_names=STEP_TERMS)
         self.fleet_overhead = fleet_overhead_s_per_log_m
+        # speculative-decode acceptance: tokens committed per occupied slot
+        # per step (1.0 = plain one-token decode).  Measured, not assumed —
+        # the engine's verify telemetry carries the committed counts.
+        self._committed_tokens = 0.0
+        self._slot_steps = 0.0
+        # chunked-prefill throughput (tokens/s across chunk calls)
+        self._prefill_tokens = 0.0
+        self._prefill_s = 0.0
 
     # ------------------------------------------------------------------
     def observe(self, batch: int, step_s: float) -> None:
         self.observations.append(ServeObservation(int(batch), float(step_s)))
 
     def observe_telemetry(self, telemetry: Sequence[Dict]) -> None:
-        """Ingest ``ServeEngine.telemetry`` rows ({batch, step_s, ...})."""
+        """Ingest ``ServeEngine.telemetry`` rows ({batch, step_s, ...}).
+
+        Decode and draft-verify rows feed the f(b) step model plus the
+        measured accepted-tokens-per-slot-step multiplier; chunked-prefill
+        rows ({kind: "prefill", prefill_tokens, step_s}) feed the prefill
+        throughput estimate.  Rows from pre-speculation engines (no ``kind``
+        key) are ingested as plain one-token decode steps."""
         for row in telemetry:
+            if row.get("kind") == "prefill":
+                self._prefill_tokens += float(row.get("prefill_tokens", 0))
+                self._prefill_s += float(row["step_s"])
+                continue
             if row["batch"] > 0:
                 self.observe(row["batch"], row["step_s"])
+                self._committed_tokens += float(
+                    row.get("committed", row["batch"])
+                )
+                self._slot_steps += float(row["batch"])
+
+    @property
+    def accepted_per_slot_step(self) -> float:
+        """Measured tokens committed per occupied slot per step (>= 1 with
+        speculation accepting drafts; exactly 1 without)."""
+        if not self._slot_steps:
+            return 1.0
+        return self._committed_tokens / self._slot_steps
+
+    @property
+    def prefill_tokens_per_s(self) -> float:
+        """Measured chunked-prefill throughput (0.0 when never observed)."""
+        if not self._prefill_s:
+            return 0.0
+        return self._prefill_tokens / self._prefill_s
 
     def observe_tuned_kernels(
         self, rows: Sequence[Dict], *, n_layers: int = 1, overhead_s: float = 0.0
@@ -98,14 +135,17 @@ class CapacityPlanner:
     def tokens_per_s(self, batch: int, m: float = 1) -> float:
         """Fleet decode throughput at operating point (b, m).  ``m`` may be
         fractional: the fleet simulator models degraded replicas (stragglers,
-        cluster slowdowns) as an effective replica count."""
+        cluster slowdowns) as an effective replica count.  The measured
+        speculative-acceptance multiplier scales per-step tokens: a step
+        commits ``batch * accepted_per_slot_step`` tokens, not ``batch``."""
         t = self.step_time(batch) + self.fleet_overhead * np.log(m + 1.0)
-        return m * batch / t
+        return m * batch * self.accepted_per_slot_step / t
 
     def p50_latency_s(self, batch: int, gen_tokens: int, m: float = 1) -> float:
-        """Per-request latency to decode ``gen_tokens`` at full batch b."""
+        """Per-request latency to decode ``gen_tokens`` at full batch b
+        (``gen_tokens / accepted_per_slot_step`` steps with speculation)."""
         t = self.step_time(batch) + self.fleet_overhead * np.log(m + 1.0)
-        return gen_tokens * t
+        return gen_tokens / self.accepted_per_slot_step * t
 
     # ------------------------------------------------------------------
     def plan(

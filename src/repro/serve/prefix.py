@@ -44,6 +44,7 @@ class FullPromptEntry:
     page_ids: Tuple[int, ...]
     last_logits: np.ndarray
     state: Any  # snapshot_state tree, or None for stateless archs
+    tokens: Optional[np.ndarray] = None  # the prompt itself (draft source)
 
 
 class PrefixCache:
@@ -58,6 +59,9 @@ class PrefixCache:
         self.hits = 0
         self.pages_shared = 0
         self.prefills_skipped = 0
+        # key of the entry that served the last speculative draft (MRU
+        # fast path for ``draft``)
+        self._draft_hit: Optional[str] = None
 
     # ------------------------------------------------------------------
     def match(self, prompt: np.ndarray, pool: PagePool) -> List[int]:
@@ -120,8 +124,48 @@ class PrefixCache:
             return
         pool.share(page_ids)
         self._full[key] = FullPromptEntry(
-            tuple(page_ids), np.asarray(last_logits), state
+            tuple(page_ids),
+            np.asarray(last_logits),
+            state,
+            np.asarray(prompt, np.int32).copy(),
         )
+
+    # ------------------------------------------------------------------
+    def draft(self, ngram: np.ndarray, max_draft: int) -> Optional[np.ndarray]:
+        """Cross-request draft source for speculative decode: the tokens
+        that followed the last occurrence of ``ngram`` in the most recently
+        used stored prompt containing it (see ``repro.serve.speculate``)."""
+        from repro.serve.speculate import find_last_ngram
+
+        ngram = np.asarray(ngram, np.int32).reshape(-1)
+        if max_draft <= 0 or len(ngram) == 0:
+            return None
+
+        def scan(entry: FullPromptEntry) -> Optional[np.ndarray]:
+            if entry.tokens is None:
+                return None
+            j = find_last_ngram(entry.tokens, ngram)
+            if j < 0 or j + len(ngram) >= len(entry.tokens):
+                return None
+            start = j + len(ngram)
+            return entry.tokens[start: start + max_draft].copy()
+
+        # a drafting slot streams down one source prompt, re-matching it
+        # every step — try the entry that produced the previous draft before
+        # scanning the whole registry
+        hit = self._draft_hit
+        if hit is not None and hit in self._full:
+            d = scan(self._full[hit])
+            if d is not None:
+                return d
+        for key in reversed(self._full):
+            if key == hit:
+                continue
+            d = scan(self._full[key])
+            if d is not None:
+                self._draft_hit = key
+                return d
+        return None
 
     # ------------------------------------------------------------------
     def release_lru(self, pool: PagePool, min_free: int) -> int:

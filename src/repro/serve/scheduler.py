@@ -27,6 +27,7 @@ from repro.serve.prefix import PrefixCache
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"  # admitted; prompt entering pages chunk by chunk
     RUNNING = "running"
     FINISHED = "finished"
 
@@ -50,6 +51,8 @@ class Request:
     admitted_step: int = -1
     finished_step: int = -1
     prefill_s: float = 0.0
+    prefill_pos: int = 0  # next absolute position to prefill (chunked path)
+    first_token_step: int = -1  # step the first token was emitted
 
     @property
     def done(self) -> bool:
@@ -63,23 +66,75 @@ class Scheduler:
         pool: PagePool,
         prefix_cache: Optional[PrefixCache] = None,
         n_frontend_tokens: int = 0,
+        prefill_chunk: Optional[int] = None,
     ):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be a positive token budget, "
+                f"got {prefill_chunk}"
+            )
         self.max_batch = max_batch
         self.pool = pool
         self.prefix = prefix_cache
         self.n_frontend_tokens = n_frontend_tokens
+        self.prefill_chunk = prefill_chunk
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # admission backpressure: a request whose lifetime can never fit in
+        # the pool must be rejected up front — queueing it would deadlock the
+        # FIFO head forever (pages free up, but never enough).
+        need = self.pool.pages_for(self.total_tokens(req))
+        if need > self.pool.num_pages - 1:  # scratch page is pinned
+            raise ValueError(
+                f"request rid={req.rid} needs {need} pages but the pool only "
+                f"has {self.pool.num_pages - 1} allocatable pages; it can "
+                f"never be admitted"
+            )
         self.queue.append(req)
         self.queue.sort(key=lambda r: (r.arrival_step, r.rid))
 
     @property
     def active(self) -> List[Request]:
         return [r for r in self.slots if r is not None]
+
+    @property
+    def decoding(self) -> List[Request]:
+        """Slots contributing a token to this step's decode batch."""
+        return [r for r in self.slots
+                if r is not None and r.state is RequestState.RUNNING]
+
+    @property
+    def prefilling(self) -> List[Request]:
+        """Admitted requests still streaming their prompt in, FIFO."""
+        reqs = [r for r in self.slots
+                if r is not None and r.state is RequestState.PREFILLING]
+        return sorted(reqs, key=lambda r: (r.admitted_step, r.rid))
+
+    # ------------------------------------------------------------------
+    def plan_prefill(self) -> List[tuple]:
+        """Token-budget plan for this step's chunked prefill work: FIFO over
+        PREFILLING requests, each assignment ``(req, n_tokens)`` consumes up
+        to one chunk (``prefill_chunk`` positions) and the step's total
+        assigned tokens never exceed the ``prefill_chunk`` budget — prefill
+        progress shares the step with the running decode batch instead of
+        stalling it for a whole prompt."""
+        if self.prefill_chunk is None:
+            return []
+        budget = self.prefill_chunk
+        plan: List[tuple] = []
+        for req in self.prefilling:
+            if budget <= 0:
+                break
+            remaining = len(req.prompt) - req.prefill_pos
+            take = min(remaining, self.prefill_chunk, budget)
+            if take > 0:
+                plan.append((req, take))
+                budget -= take
+        return plan
 
     @property
     def drained(self) -> bool:

@@ -73,20 +73,26 @@ def test_decode_matches_prefill_logits(arch):
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
     lm = LM(cfg, RT)
     params, _ = lm.init(jax.random.PRNGKey(1))
-    b, s = 2, 8
+    b = 2
     f = cfg.n_frontend_tokens
+    s = 8 + f  # 8 text tokens for every arch; frontend positions on top
     tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s - f), 0,
                                 cfg.vocab_size)
-    fe = (jnp.full((b, f, cfg.d_model), 0.01, jnp.float32) if f else None)
+    fe = (jax.random.normal(jax.random.PRNGKey(3), (b, f, cfg.d_model),
+                            jnp.float32) * 0.02 if f else None)
     logits_prefill, _ = jax.jit(lm.prefill)(params, tokens, fe)
-    # feed tokens one-by-one through decode (frontend unsupported in decode
-    # smoke: skip archs with a frontend for this equivalence check)
-    if f:
-        pytest.skip("frontend archs: prefill-only equivalence")
+    # feed the sequence one position at a time through decode: frontend
+    # embeds first (teacher-forced via decode_step's frontend_embed path),
+    # then the text tokens
     cache = lm.init_cache(b, s + 1)
     lengths = jnp.zeros((b,), jnp.int32)
     dec = jax.jit(lm.decode_step)
-    for t in range(s):
+    dummy = jnp.zeros((b,), jnp.int32)
+    for t in range(f):
+        logits_dec, cache = dec(params, dummy, lengths, cache,
+                                frontend_embed=fe[:, t])
+        lengths = lengths + 1
+    for t in range(s - f):
         logits_dec, cache = dec(params, tokens[:, t], lengths, cache)
         lengths = lengths + 1
     np.testing.assert_allclose(

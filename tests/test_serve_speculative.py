@@ -1,0 +1,213 @@
+"""Chunked prefill + speculative multi-token decode: exactness and policy.
+
+The engine-level contract is *bit-identity*: with any ``prefill_chunk`` /
+``speculate`` setting, generated tokens AND per-step logits must equal the
+plain one-token-per-step engine's, logit for logit, on mixed traces with
+staggered arrivals and shared prompt heads.  That is asserted here for a
+GQA architecture (qwen3) and an MLA+MoE architecture (deepseek-v2), plus
+scheduler edge cases (tiny chunk budgets under bursts, admission
+backpressure, degenerate knobs), the n-gram/prefix-cache proposer, and the
+CapacityPlanner's ingestion of verify/prefill telemetry."""
+import numpy as np
+import pytest
+
+from repro.serve import CapacityPlanner, ServeEngine
+from repro.serve.prefix import PrefixCache
+from repro.serve.speculate import NgramProposer, find_last_ngram
+
+GEOM = dict(smoke=True, max_batch=2, page_size=8, max_seq=64, seed=0)
+
+
+def _prompt(rng, n):
+    return rng.randint(0, 256, n).astype(np.int32)
+
+
+def _mixed_trace(eng, seed=0, n_requests=8):
+    """Mixed lengths, bursty arrivals, every third request shares a head."""
+    rng = np.random.RandomState(seed)
+    head = _prompt(rng, 2 * eng.page_size)
+    reqs = []
+    for i in range(n_requests):
+        if i % 3 == 0:
+            prompt = np.concatenate([head, _prompt(rng, 3 + rng.randint(0, 8))])
+        else:
+            prompt = _prompt(rng, int(rng.choice([7, 12, 21, 30])))
+        reqs.append(eng.submit(prompt, int(rng.choice([4, 6, 8])),
+                               arrival_step=(i // 2) * 2))
+    return reqs
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.parametrize("arch", ["qwen3-14b", "deepseek-v2-236b"])
+def test_chunked_speculative_bit_identical_to_baseline(arch):
+    """Chunked prefill + speculation change step count and cost, never the
+    output: tokens and logits match the plain engine exactly on a mixed
+    8-request trace (GQA and MLA+MoE paged attention paths)."""
+    fast = ServeEngine(arch, prefill_chunk=8, speculate=3,
+                       collect_logits=True, **GEOM)
+    base = ServeEngine(arch, collect_logits=True, **GEOM)
+    fast_reqs = _mixed_trace(fast)
+    base_reqs = _mixed_trace(base)
+    fast.run()
+    base.run()
+    for rf, rb in zip(fast_reqs, base_reqs):
+        assert rf.generated == rb.generated
+        assert len(rf.logits_trace) == len(rb.logits_trace)
+        for lf, lb in zip(rf.logits_trace, rb.logits_trace):
+            np.testing.assert_array_equal(lf, lb)
+
+
+def test_speculation_commits_multiple_tokens_per_step():
+    """On a self-continuation workload (follow-up prompt extends a stored
+    document) drafts are accepted, so the trace drains in fewer decode
+    steps than tokens committed."""
+    eng = ServeEngine("qwen3-14b", speculate=4, **GEOM)
+    seed = _prompt(np.random.RandomState(3), 16)
+    doc_req = eng.submit(seed, 40)
+    eng.run()
+    doc = np.concatenate([seed, np.asarray(doc_req.generated, np.int32)])
+    eng.submit(doc, 1)  # page-aligned prompt: stored as a draft source
+    eng.run()
+    follow = eng.submit(doc[:33].copy(), 20)
+    eng.run()
+    base = ServeEngine("qwen3-14b", **GEOM)
+    base.submit(seed, 40)
+    base.run()
+    base.submit(doc, 1)
+    base.run()
+    follow_b = base.submit(doc[:33].copy(), 20)
+    base.run()
+    assert follow.generated == follow_b.generated
+    s = eng.stats()
+    assert s["draft_accepted"] > 0
+    assert s["decode_steps"] < s["decode_tokens"]
+
+
+# ------------------------------------------------------- scheduler policy
+def test_tiny_chunk_budget_burst_drains_and_bounds_join():
+    """A burst of long prompts under a tiny chunk budget must drain with
+    every request served and first tokens paced by the budget (no request
+    waits for the whole queue's prefill)."""
+    eng = ServeEngine("qwen3-14b", prefill_chunk=4, **GEOM)
+    rng = np.random.RandomState(0)
+    reqs = [eng.submit(_prompt(rng, 40), 4, arrival_step=0) for _ in range(4)]
+    stats = eng.run()
+    assert stats["requests_finished"] == 4
+    assert all(r.first_token_step >= 0 for r in reqs)
+    assert "join_to_first_token_p99" in stats
+    # 4 prompts x 40 tokens at 4 tokens/step is ~40 budget steps total;
+    # p99 join must reflect pacing, not starvation
+    assert stats["join_to_first_token_p99"] < 80
+
+
+def test_admission_backpressure_no_deadlock():
+    """Two requests that cannot coexist in the pool are served one after
+    the other; a request that can never fit raises at submit."""
+    eng = ServeEngine("qwen3-14b", prefill_chunk=8, num_pages=6, **GEOM)
+    rng = np.random.RandomState(1)
+    a = eng.submit(_prompt(rng, 24), 4)   # 4 of the 5 usable pages
+    b = eng.submit(_prompt(rng, 24), 4)
+    stats = eng.run(max_steps=500)
+    assert stats["requests_finished"] == 2
+    assert len(a.generated) == len(b.generated) == 4
+    with pytest.raises(ValueError, match="never"):
+        eng.submit(_prompt(rng, 44), 4)  # 6 pages: more than can ever free
+
+
+def test_degenerate_knobs_rejected():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine("qwen3-14b", prefill_chunk=0, **GEOM)
+    with pytest.raises(ValueError, match="speculate"):
+        ServeEngine("qwen3-14b", speculate=-1, **GEOM)
+    # recurrent-state mixers have no paged positional cache to chunk into
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine("falcon-mamba-7b", prefill_chunk=8, **GEOM)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine("falcon-mamba-7b", speculate=2, **GEOM)
+
+
+# ------------------------------------------------------------ the proposer
+def test_find_last_ngram():
+    hay = np.array([5, 1, 2, 9, 1, 2, 7], np.int32)
+    assert find_last_ngram(hay, np.array([1, 2], np.int32)) == 4
+    assert find_last_ngram(hay, np.array([9], np.int32)) == 3
+    assert find_last_ngram(hay, np.array([3, 3], np.int32)) == -1
+    assert find_last_ngram(hay[:1], np.array([5, 1], np.int32)) == -1
+
+
+def test_proposer_self_lookup_continues_repetition():
+    prop = NgramProposer(max_n=3)
+    ctx = np.array([7, 3, 9, 4, 7, 3, 9, 4, 7, 3], np.int32)
+    d = prop.propose(ctx, 4)
+    np.testing.assert_array_equal(d, [9, 4, 7, 3])
+
+
+def test_proposer_min_n_floor_ignores_unigram_noise():
+    """A lone repeated token is not evidence of a continuation: with the
+    default min_n=2 floor the proposer stays silent instead of turning
+    every step into a wide verify step."""
+    ctx = np.array([1, 2, 3, 4, 5, 6, 3], np.int32)  # only a 1-gram repeat
+    assert len(NgramProposer(max_n=3).propose(ctx, 4)) == 0
+    d = NgramProposer(max_n=3, min_n=1).propose(ctx, 4)
+    np.testing.assert_array_equal(d, [4, 5, 6, 3])
+
+
+def test_proposer_prefix_cache_fallback():
+    """When the request's own context has no match, drafts come from the
+    stored full prompt of an earlier request (cross-request lookup)."""
+    cache = PrefixCache(page_size=4)
+    doc = np.arange(100, 116, dtype=np.int32)  # aligned: gets stored
+
+    class _Pool:
+        def share(self, pages):
+            pass
+
+    cache.register_full(doc, [1, 2, 3, 4], np.zeros(8), None, _Pool())
+    prop = NgramProposer(max_n=3, prefix_cache=cache)
+    ctx = np.array([104, 105], np.int32)
+    np.testing.assert_array_equal(prop.propose(ctx, 4), [106, 107, 108, 109])
+    assert len(prop.propose(np.array([7, 8], np.int32), 4)) == 0
+
+
+def test_proposer_accept_rate_accounting():
+    prop = NgramProposer()
+    prop.record(4, 3)
+    prop.record(4, 1)
+    prop.record(0, 0)  # no proposal: not counted
+    assert prop.proposals == 2
+    assert prop.proposed_tokens == 8
+    assert prop.accepted_tokens == 4
+    assert prop.accept_rate == 0.5
+
+
+# ------------------------------------------------------- planner ingestion
+def test_planner_ingests_verify_and_prefill_telemetry():
+    """Verify rows raise the measured accepted-tokens multiplier above 1,
+    scaling throughput up and per-request latency down; prefill rows feed
+    the chunked-prefill throughput estimate; legacy rows (no ``kind``)
+    still fit the f(b) step model unchanged."""
+    rows = [
+        {"step": 0, "batch": 2, "step_s": 0.010, "kind": "verify",
+         "committed": 6, "drafted": 4},
+        {"step": 1, "batch": 4, "step_s": 0.012, "kind": "verify",
+         "committed": 12, "drafted": 8},
+        {"step": 2, "batch": 0, "step_s": 0.004, "kind": "prefill",
+         "prefill_tokens": 16},
+    ]
+    p = CapacityPlanner()
+    p.observe_telemetry(rows)
+    assert p.accepted_per_slot_step == pytest.approx(3.0)
+    assert p.prefill_tokens_per_s == pytest.approx(16 / 0.004)
+    p.fit()
+    plain = CapacityPlanner()
+    plain.observe_telemetry([
+        {"step": 0, "batch": 2, "step_s": 0.010},
+        {"step": 1, "batch": 4, "step_s": 0.012},
+    ])
+    plain.fit()
+    assert plain.accepted_per_slot_step == 1.0
+    assert plain.prefill_tokens_per_s == 0.0
+    # same fitted f(b): the multiplier, not the step model, carries the win
+    assert p.tokens_per_s(4) == pytest.approx(3.0 * plain.tokens_per_s(4))
+    assert p.p50_latency_s(4, 30) == pytest.approx(
+        plain.p50_latency_s(4, 30) / 3.0)
