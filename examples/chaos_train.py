@@ -25,10 +25,12 @@ import argparse
 
 
 def summarize(log) -> None:
-    print(f"steps={len(log.rows)} mitigations={log.n_mitigations()} "
+    steps = log.events("chaos_step")
+    wall = steps[-1].wall_s if steps else 0.0
+    print(f"steps={len(steps)} mitigations={log.n_mitigations()} "
           f"resizes={log.n_resizes()} final_m={log.meta['final_m']} "
           f"final_objective={log.meta['final_objective']:.4f} "
-          f"modeled_wall={log.final_wall_clock():.1f}s")
+          f"modeled_wall={wall:.1f}s")
     for r in log.rows:
         tag = r.get("mitigation") or r.get("decision") or r.get("restore")
         if tag:
@@ -40,7 +42,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--steps", type=int, default=160)
-    ap.add_argument("--out", default=None, help="write run log JSON here")
+    ap.add_argument("--out", default=None,
+                    help="write the run log here (.json for the legacy "
+                         "blob, .jsonl for the telemetry event log)")
     ap.add_argument("--lm", action="store_true",
                     help="drive the real (smoke) LM trainer instead of the "
                          "convex BSP simulator")
@@ -67,7 +71,13 @@ def main():
                 "replay diverged from the original run"
             print("replay: identical (m, objective, decision) sequence ✓")
     if args.out:
-        log.save(args.out)
+        if str(args.out).endswith(".jsonl"):
+            # telemetry event-log form: one typed event per line plus a
+            # run_meta header; inspect with `python -m repro.telemetry
+            # summarize <out>`
+            log.to_jsonl(args.out)
+        else:
+            log.save(args.out)
         print(f"run log -> {args.out}")
 
 

@@ -7,6 +7,7 @@ from repro.fleet.simulate import (
     FleetRunLog,
     FleetSimulator,
     build_day_scenario,
+    build_drift_scenario,
     replay,
     run_fleet_sim,
 )
@@ -31,6 +32,7 @@ __all__ = [
     "ServeDeployment",
     "TrainingJob",
     "build_day_scenario",
+    "build_drift_scenario",
     "replay",
     "run_fleet_sim",
     "serve_capacity_planner",

@@ -32,11 +32,14 @@ import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Sequence
 
+from collections import deque
+
 from repro.core.adaptive import ResizeDecision
 from repro.core.hemingway import NoFeasiblePlan
 from repro.fleet.cluster import FleetCluster
 from repro.fleet.workloads import ServeDeployment, TrainingJob
 from repro.runtime.chaos import ChaosEvent
+from repro.telemetry import DriftConfig, DriftDetector, Event, RefitEvent
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +56,12 @@ class FleetConfig:
     #                                   progress pays slack back 1:1, so a
     #                                   comfortable shrink never needs a
     #                                   deadline rescue later (no flapping)
+    # opt-in streaming refit of each running job's pace model: watch the
+    # modeled vs measured per-tick work rate, and when the normalized
+    # residual drifts past the threshold, refit the job's pace factor from
+    # the trailing window and force a replanning pass (None = off, which
+    # keeps pre-drift golden traces bit-identical)
+    drift: Optional[DriftConfig] = None
 
 
 class FleetScheduler:
@@ -68,6 +77,17 @@ class FleetScheduler:
         self.resize_decisions: List[ResizeDecision] = []
         self._last_resize: Dict[str, int] = {}
         self.cost_host_s = 0.0
+        # streaming pace refit (cfg.drift opt-in): per-job detector + pace
+        # window; typed drift/refit events buffer here until the simulator
+        # drains them onto the run log's bus after each tick
+        self._drift: Dict[str, DriftDetector] = {}
+        self._pace_window: Dict[str, deque] = {}
+        self._needs_replan: set = set()
+        self.pending_events: List[Event] = []
+
+    def drain_events(self) -> List[Event]:
+        out, self.pending_events = self.pending_events, []
+        return out
 
     # ------------------------------------------------------------------
     # One tick
@@ -343,7 +363,10 @@ class FleetScheduler:
             at_risk = rem_cur is None or rem_cur > slack
             in_cooldown = (step - self._last_resize.get(name, -10 ** 9)
                            < self.cfg.resize_cooldown_ticks)
-            if in_cooldown and not at_risk:   # rescues don't wait out no-flap
+            # rescues and drift-triggered replans don't wait out no-flap
+            replan = name in self._needs_replan
+            self._needs_replan.discard(name)
+            if in_cooldown and not (at_risk or replan):
                 continue
             candidates: Dict[int, float] = {}
             for m in job.m_options:
@@ -419,6 +442,8 @@ class FleetScheduler:
                 continue
             pace = self.cluster.bsp_pace(name)   # >= 1: slowest-host drag
             work_s = self.cfg.tick_s / pace
+            if self.cfg.drift is not None:
+                self._observe_pace(step, job, pace, decisions)
             paid = min(job.penalty_s, work_s)
             job.penalty_s -= paid
             work_s -= paid
@@ -440,6 +465,57 @@ class FleetScheduler:
                 job.since_ckpt_s = 0.0
                 if job.executor is not None:
                     job.executor.checkpoint()
+
+    def _observe_pace(self, step: int, job: TrainingJob, pace: float,
+                      decisions: List[str]) -> None:
+        """Streaming refit of the job's pace model (cfg.drift opt-in).
+
+        The remaining-time model assumes the cluster delivers
+        ``tick_s / pace_factor`` seconds of useful work per tick; the
+        measured delivery is ``tick_s / pace``.  When the normalized
+        residual between the two drifts past the threshold (a sustained
+        slowdown, not a one-tick blip), refit ``pace_factor`` to the
+        trailing-window mean pace — which rescales ``remaining_s`` for
+        every m — emit the typed drift/refit events, and force a
+        replanning pass through ``_resize_training`` next tick."""
+        name = job.name
+        cfgd = self.cfg.drift
+        det = self._drift.get(name)
+        if det is None:
+            det = self._drift[name] = DriftDetector(f"pace:{name}", cfgd)
+            self._pace_window[name] = deque(maxlen=cfgd.window)
+        window = self._pace_window[name]
+        window.append(pace)
+        predicted = self.cfg.tick_s / job.pace_factor
+        actual = self.cfg.tick_s / pace
+        drift = det.observe(step, predicted, actual)
+        if drift is None:
+            return
+        self.pending_events.append(drift)
+        decisions.append(f"drift:{name}")
+        # refit from the new regime only: the trailing run of window points
+        # whose own residual (vs the stale model) exceeds the threshold —
+        # averaging in pre-drift points would split the difference between
+        # regimes and under-correct
+        recent = list(window)
+        for i in range(len(recent) - 1, -1, -1):
+            err = abs(self.cfg.tick_s / recent[i] - predicted) / predicted
+            if err <= cfgd.threshold:
+                recent = recent[i + 1:]
+                break
+        recent = recent or list(window)
+        new_factor = sum(recent) / len(recent)
+        after = sum(
+            abs(self.cfg.tick_s / p - self.cfg.tick_s / new_factor)
+            / (self.cfg.tick_s / new_factor)
+            for p in recent
+        ) / len(recent)
+        job.pace_factor = new_factor
+        self.pending_events.append(RefitEvent(
+            step=step, model=f"pace:{name}", n_obs=len(recent),
+            residual_before=drift.residual, residual_after=after))
+        det.reset()
+        self._needs_replan.add(name)
 
     def _account_serve(self, step: int,
                        preempted: Dict[str, List[int]]) -> Dict[str, Any]:

@@ -27,6 +27,7 @@ from repro.fleet.workloads import (
     training_model,
 )
 from repro.runtime.chaos import ChaosEvent, ChaosRunLog, ChaosTrace
+from repro.telemetry import DriftConfig, warn_deprecated
 
 
 # ---------------------------------------------------------------------------
@@ -35,7 +36,12 @@ from repro.runtime.chaos import ChaosEvent, ChaosRunLog, ChaosTrace
 class FleetRunLog(ChaosRunLog):
     """ChaosRunLog's trace+rows+meta JSON artifact, with fleet semantics:
     the signature covers scheduler decisions, allocations, and the modeled
-    serve/training outcomes."""
+    serve/training outcomes.  Rows ride the telemetry bus as typed
+    ``FleetTickEvent``s (kind ``fleet_tick``); scheduler drift/refit
+    events share the same tracker but stay out of ``rows``/signatures."""
+
+    EVENT_KIND = "fleet_tick"
+    LOG_TYPE = "fleet"
 
     def signature(self) -> List[tuple]:
         """The full sequence in-process replay must reproduce exactly: per
@@ -74,7 +80,10 @@ class FleetRunLog(ChaosRunLog):
                 if d.startswith(prefix)]
 
     def fleet_cost_host_hours(self) -> float:
-        return self.rows[-1]["cost_hh"] if self.rows else 0.0
+        warn_deprecated("FleetRunLog.fleet_cost_host_hours()",
+                        'events("fleet_tick")[-1].cost_hh')
+        rows = self.rows
+        return rows[-1]["cost_hh"] if rows else 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +106,9 @@ class FleetSimulator:
         for step in range(steps):
             events, lost, preempted = self.cluster.advance(step)
             log.append(**sched.tick(step, events, lost, preempted))
+            # drift/refit events ride the same bus, outside rows/signature
+            for ev in sched.drain_events():
+                log.emit(ev)
         log.meta["summary"] = self.summary()
         return log
 
@@ -205,24 +217,109 @@ def build_day_scenario(seed: int, *, ticks: int = DAY_TICKS,
     return trace, jobs, deployments, cfg
 
 
-def run_fleet_sim(seed: int, *, ticks: int = DAY_TICKS,
-                  tick_s: float = DAY_TICK_S, n_hosts: int = DAY_HOSTS,
-                  trace: Optional[ChaosTrace] = None) -> FleetRunLog:
-    """One deterministic fleet day; everything derives from ``seed``."""
-    trace, jobs, deployments, cfg = build_day_scenario(
-        seed, ticks=ticks, tick_s=tick_s, n_hosts=n_hosts, trace=trace)
+# ---------------------------------------------------------------------------
+# The drift scenario: a sustained cluster slowdown mid-run
+# ---------------------------------------------------------------------------
+DRIFT_TICKS = 192
+DRIFT_TICK_S = 300.0
+DRIFT_HOSTS = 16
+
+
+def build_drift_scenario(seed: int, *, ticks: int = DRIFT_TICKS,
+                         tick_s: float = DRIFT_TICK_S,
+                         n_hosts: int = DRIFT_HOSTS,
+                         trace: Optional[ChaosTrace] = None,
+                         drift: bool = True):
+    """(trace, jobs, deployments, cfg) for the streaming-refit scenario.
+
+    An otherwise-quiet cluster takes a sustained 2x cluster-wide slowdown
+    for the middle third of the run.  The one training job's deadline is
+    sized so its admitted (cheapest) m=2 meets it comfortably at modeled
+    pace but misses it at 2x.  With the streaming refit on the detector
+    fires within a few ticks of onset, ``pace_factor`` is refit from the
+    new-regime window (rescaling ``remaining_s`` for every m), and the
+    forced replanning pass rescues the deadline immediately (m=2 -> 8 at
+    seed 0).  With ``drift=False`` the same scenario runs open-loop: the
+    stale model only notices via lagging *progress* ~40 ticks later, and
+    its panicked late resizes no longer make the deadline — the control
+    arm the tests compare against."""
+    if trace is None:
+        # background chaos off: the scenario isolates the drift signal
+        trace = ChaosTrace.generate(seed, ticks, n_hosts, p_straggler=0.0,
+                                    p_slowdown=0.0, p_preempt=0.0,
+                                    p_membership=0.0, warmup=12)
+        trace.events.append(ChaosEvent(
+            step=ticks // 3, kind="slowdown", host=-1, magnitude=2.0,
+            duration=ticks // 3))
+        trace.events.sort(key=lambda e: (e.step, e.host, e.kind))
+
+    horizon = ticks * tick_s
+    jobs = [
+        TrainingJob(
+            name="job_drift", eps=1e-2, arrival_s=0.0,
+            deadline_s=0.70 * horizon, m_options=(2, 4, 8),
+            model=training_model(compute_s=36.0, rate=3.2e-3),
+            ckpt_every_s=6 * tick_s),
+    ]
+    deployments = [
+        ServeDeployment(
+            name="serve_bg",
+            planner=serve_capacity_planner(dispatch_s=0.012,
+                                           per_seq_s=0.0030,
+                                           log_b_s=0.001),
+            trace=RequestTrace.diurnal(seed * 7919 + 3, ticks, tick_s,
+                                       base_qps=1.0, peak_qps=3.0,
+                                       burst_prob=0.0),
+            slo_p95_s=2.5, gen_tokens=32,
+            batch_grid=(1, 2, 4, 8), replica_options=tuple(range(1, 5))),
+    ]
+    drift_cfg = DriftConfig(window=8, threshold=0.25, min_points=4,
+                            cooldown=16) if drift else None
+    cfg = FleetConfig(tick_s=tick_s, drift=drift_cfg)
+    return trace, jobs, deployments, cfg
+
+
+_SCENARIOS = {
+    "day": (build_day_scenario, DAY_TICKS, DAY_TICK_S, DAY_HOSTS),
+    "drift": (build_drift_scenario, DRIFT_TICKS, DRIFT_TICK_S, DRIFT_HOSTS),
+}
+
+
+def run_fleet_sim(seed: int, *, ticks: Optional[int] = None,
+                  tick_s: Optional[float] = None,
+                  n_hosts: Optional[int] = None,
+                  trace: Optional[ChaosTrace] = None,
+                  scenario: str = "day",
+                  drift: bool = False) -> FleetRunLog:
+    """One deterministic fleet run; everything derives from ``seed``.
+
+    ``scenario`` picks the builder ("day" or "drift") and its defaults;
+    ``drift`` turns the scheduler's streaming pace refit on (off by
+    default everywhere, so pre-drift goldens stay bit-identical)."""
+    build, d_ticks, d_tick_s, d_hosts = _SCENARIOS[scenario]
+    ticks = d_ticks if ticks is None else ticks
+    tick_s = d_tick_s if tick_s is None else tick_s
+    n_hosts = d_hosts if n_hosts is None else n_hosts
+    kwargs = dict(ticks=ticks, tick_s=tick_s, n_hosts=n_hosts, trace=trace)
+    if scenario == "drift":
+        kwargs["drift"] = drift
+    trace, jobs, deployments, cfg = build(seed, **kwargs)
+    if drift and cfg.drift is None:
+        cfg = FleetConfig(**{**cfg.__dict__, "drift": DriftConfig()})
     # the horizon is the *requested* one, not the trace's: a recorded trace
     # longer (or shorter) than --ticks must not silently change the run
     log = FleetSimulator(trace, jobs, deployments, cfg).run(steps=ticks)
-    log.meta.update(seed=seed, ticks=ticks, scenario="day")
+    log.meta.update(seed=seed, ticks=ticks, scenario=scenario, drift=drift)
     return log
 
 
 def replay(run_log: FleetRunLog) -> FleetRunLog:
-    """Re-run a recorded fleet day from its embedded trace + meta; the
+    """Re-run a recorded fleet run from its embedded trace + meta; the
     result must match ``run_log.signature()`` exactly."""
     meta = run_log.meta
     return run_fleet_sim(int(meta["seed"]), ticks=int(meta["ticks"]),
                          tick_s=float(meta["tick_s"]),
                          n_hosts=int(meta["n_hosts"]),
-                         trace=run_log.trace)
+                         trace=run_log.trace,
+                         scenario=meta.get("scenario", "day"),
+                         drift=bool(meta.get("drift", False)))

@@ -185,6 +185,10 @@ class TrainingJob:
     #                              (or infeasible, with no_plan set)
     m: int = 0
     progress: float = 0.0        # completed work fraction in [0, 1]
+    pace_factor: float = 1.0     # streaming-refit multiplier on remaining
+    #                              time (>1: the cluster is delivering work
+    #                              slower than the model assumed; set by the
+    #                              scheduler's drift detector, never drawn)
     ckpt_progress: float = 0.0   # last checkpointed fraction
     since_ckpt_s: float = 0.0
     penalty_s: float = 0.0       # pending restore/reshard seconds to pay
@@ -210,7 +214,7 @@ class TrainingJob:
         t = self.time_to_eps(m)
         if t is None:
             return None
-        return (1.0 - self.progress) * t + self.penalty_s
+        return (1.0 - self.progress) * t * self.pace_factor + self.penalty_s
 
     def admission_plan(self) -> PlanResult:
         """The Hemingway query behind admission: fastest (m, t) per option.

@@ -14,8 +14,10 @@ Public surface:
   a miss (callers fall back to their defaults).  Safe under jit tracing.
 * ``default_cache()`` — process-wide cache bound to
   ``$REPRO_TUNE_CACHE`` / ``results/tune_cache.json``.
-* ``bench_rows`` / ``decode_step_rows`` — telemetry export
-  (benchmarks + CapacityPlanner/dryrun system-model fitting).
+* ``tune_events`` / ``bench_rows`` — telemetry export: typed bus events
+  for ``CapacityPlanner.ingest``/dryrun system-model fitting, bench rows
+  for the perf-gate trajectory (``decode_step_rows`` is the deprecated
+  dict form).
 
 CLI: ``python -m repro.kernels.tune --preset smoke``.
 """
@@ -39,7 +41,7 @@ from repro.kernels.tune.sweep import (
     sweep_all,
     time_fn,
 )
-from repro.kernels.tune.telemetry import bench_rows, decode_step_rows
+from repro.kernels.tune.telemetry import bench_rows, decode_step_rows, tune_events
 
 __all__ = [
     "ConfigCache",
@@ -58,6 +60,7 @@ __all__ = [
     "sweep",
     "sweep_all",
     "time_fn",
+    "tune_events",
 ]
 
 _default_cache: Optional[ConfigCache] = None

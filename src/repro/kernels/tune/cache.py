@@ -20,11 +20,12 @@ from __future__ import annotations
 
 import json
 import os
-import tempfile
 from pathlib import Path
 from typing import Dict, Optional
 
 import jax
+
+from repro.telemetry.io import atomic_write_json, file_lock
 
 DEFAULT_CACHE_PATH = "results/tune_cache.json"
 _SCHEMA_VERSION = 1
@@ -49,10 +50,13 @@ def cache_key(family: str, shape: Dict[str, int], dtype, backend: Optional[str] 
 
 
 class ConfigCache:
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None, tracker=None):
         self.path = path
         self.entries: Dict[str, Dict] = {}
         self.sweeps = 0  # incremented by the sweep harness, not persisted
+        # optional repro.telemetry.Tracker; the sweep harness emits a
+        # TuneEvent here (falls back to the process default tracker)
+        self.tracker = tracker
         if path is not None and Path(path).exists():
             self.load()
 
@@ -106,17 +110,25 @@ class ConfigCache:
         return self
 
     def save(self) -> None:
+        """Merge-then-write through the shared atomic helper.
+
+        Two processes sweeping different keys against the same file (the
+        CI slow job overlapping tier-1) used to race: last writer wins,
+        silently dropping the other's entries.  Now each save takes an
+        exclusive lock, re-reads the on-disk entries, and overlays its
+        own before the atomic replace, so concurrent sweeps union
+        instead of clobbering."""
         if self.path is None:
             return
-        path = Path(self.path)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        payload = {"version": _SCHEMA_VERSION, "entries": self.entries}
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=2, sort_keys=True)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        with file_lock(str(self.path) + ".lock"):
+            if Path(self.path).exists():
+                try:
+                    with open(self.path) as f:
+                        payload = json.load(f)
+                    if payload.get("version") == _SCHEMA_VERSION:
+                        self.entries = {**payload["entries"], **self.entries}
+                except (OSError, json.JSONDecodeError):
+                    pass  # torn/unreadable: our atomic write supersedes it
+            atomic_write_json(
+                self.path, {"version": _SCHEMA_VERSION, "entries": self.entries}
+            )

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.kernels.tune import roofline
 from repro.kernels.tune.cache import ConfigCache, cache_key
+from repro.telemetry import TuneEvent, default_tracker
 
 FAMILIES = (
     "flash_attention",
@@ -289,6 +290,10 @@ def sweep(
         pruned=n_pruned,
     )
     cache.save()
+    # every sweep result rides the bus: a cache with its own tracker keeps
+    # the events alongside the entries, otherwise the process-wide default
+    tracker = getattr(cache, "tracker", None) or default_tracker()
+    tracker.emit(TuneEvent.from_legacy_row(entry))
     return best_config, entry
 
 

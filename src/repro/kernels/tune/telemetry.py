@@ -1,15 +1,20 @@
 """Export tuned kernel timings as telemetry consumers understand.
 
-Two consumers:
+The canonical export is ``tune_events``: one typed
+``repro.telemetry.TuneEvent`` per cache entry, the same events the sweep
+harness emits on its tracker as results land.  Consumers:
 
-* the benchmark harness (``benchmarks/run.py``) ingests ``bench_rows`` —
-  one ``tune/<family>/<sig>`` row per cache entry, so tuned timings ride
-  the same BENCH_*.json trajectory the perf gate tracks;
-* the capacity planner (``repro.serve.planner``) and the dry-run system
-  model (``repro.launch.dryrun``) ingest ``decode_step_rows`` — measured
+* the capacity planner (``repro.serve.planner.CapacityPlanner.ingest``)
+  and the dry-run system model ingest the events directly — measured
   paged-decode kernel timings the planner scales to whole decode steps
   (``n_layers * kernel + overhead``), so f(b) can be fitted from measured
-  kernel costs before any engine traffic exists.
+  kernel costs before any engine traffic exists;
+* the benchmark harness (``benchmarks/run.py``) ingests ``bench_rows`` —
+  one ``tune/<family>/<sig>`` row per cache entry, so tuned timings ride
+  the same BENCH_*.json trajectory the perf gate tracks.
+
+``decode_step_rows`` is the deprecated pre-bus dict export (one release
+of shim left).
 """
 
 from __future__ import annotations
@@ -18,8 +23,16 @@ from typing import Dict, List, Tuple
 
 from repro.kernels.tune.cache import ConfigCache
 from repro.kernels.tune.roofline import estimate, roofline_fraction_us
+from repro.telemetry import TuneEvent, warn_deprecated
 
 Row = Tuple[str, float, str]
+
+
+def tune_events(cache: ConfigCache) -> List[TuneEvent]:
+    """One typed ``TuneEvent`` per cache entry (sorted by key)."""
+    return [
+        TuneEvent.from_legacy_row(cache.entries[key]) for key in sorted(cache.entries)
+    ]
 
 
 def bench_rows(cache: ConfigCache) -> List[Row]:
@@ -41,19 +54,20 @@ def bench_rows(cache: ConfigCache) -> List[Row]:
 
 
 def decode_step_rows(cache: ConfigCache) -> List[Dict]:
-    """Measured paged-decode timings as ``{batch, step_s}`` telemetry rows
-    (the shape the serve planner ingests; per-kernel seconds — layer-count
-    scaling happens in ``CapacityPlanner.observe_tuned_kernels``).  One row
-    per ``flash_decode_paged`` entry; batch comes from the entry's stored
-    shape dict, never from parsing the signature."""
+    """Deprecated: measured paged-decode timings as ``{batch, step_s}``
+    dicts.  Use ``tune_events`` + ``CapacityPlanner.ingest`` instead."""
+    warn_deprecated(
+        "repro.kernels.tune.decode_step_rows",
+        "tune_events(cache) + CapacityPlanner.ingest(events)",
+    )
     rows = []
-    for e in cache.entries.values():
-        if e["family"] != "flash_decode_paged":
+    for ev in tune_events(cache):
+        if ev.family != "flash_decode_paged":
             continue
         rows.append(
             {
-                "batch": int(e["shape"]["b"]),
-                "step_s": e["us_per_call"] * 1e-6,
+                "batch": int(ev.shape["b"]),
+                "step_s": ev.us_per_call * 1e-6,
                 "source": "kernel_tuner",
             }
         )

@@ -60,7 +60,8 @@ class Server:
         assert greedy, "only greedy decoding is supported"
         b, _ = prompts.shape
         eng = self._make_engine(b)
-        n_before = len(eng.telemetry)  # engine may be reused across calls
+        # engine may be reused across calls
+        n_before = len(eng.events("serve_step"))
         reqs = []
         for i in range(b):
             fe = None if frontend_embeds is None else frontend_embeds[i]
@@ -68,9 +69,10 @@ class Server:
                                    gen_tokens, frontend_embeds=fe))
         eng.run()
         tokens = np.stack([np.asarray(r.generated, np.int32) for r in reqs])
-        this_call = [t for t in eng.telemetry[n_before:] if t["batch"] > 0]
-        t_decode = sum(t["step_s"] for t in this_call)
-        n_tok = sum(t["batch"] for t in this_call)
+        this_call = [e for e in eng.events("serve_step")[n_before:]
+                     if e.batch > 0]
+        t_decode = sum(e.step_s for e in this_call)
+        n_tok = sum(e.batch for e in this_call)
         return {
             "tokens": tokens,
             "prefill_s": sum(r.prefill_s for r in reqs),
@@ -253,14 +255,14 @@ def main():
 
     planner = CapacityPlanner()
     if args.tune_cache:
-        from repro.kernels.tune import ConfigCache, decode_step_rows
+        from repro.kernels.tune import ConfigCache, tune_events
 
-        rows = decode_step_rows(ConfigCache(args.tune_cache))
         n_layers = eng.cfg.n_layers
-        n = planner.observe_tuned_kernels(rows, n_layers=n_layers)
+        n = planner.ingest(tune_events(ConfigCache(args.tune_cache)),
+                           n_layers=n_layers)
         print(f"capacity plan: seeded with {n} measured kernel row(s) "
               f"from {args.tune_cache} (x{n_layers} layers)")
-    planner.observe_telemetry(eng.telemetry)
+    planner.ingest(eng.events("serve_step"))
     try:
         planner.fit()
     except ValueError as e:

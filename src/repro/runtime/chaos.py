@@ -46,6 +46,16 @@ from typing import Any, Dict, List, Optional, Sequence
 from repro.core.adaptive import AdaptiveController
 from repro.runtime.failures import FailureInjector, SimulatedFailure
 from repro.runtime.straggler import StragglerMonitor
+from repro.telemetry import (
+    Event,
+    MemorySink,
+    RunMeta,
+    Tracker,
+    from_legacy,
+    read_events,
+    warn_deprecated,
+)
+from repro.telemetry.refit import StreamingErnest
 
 EVENT_KINDS = ("straggler_on", "straggler_off", "slowdown", "preempt",
                "join", "leave")
@@ -268,14 +278,44 @@ class ClusterSim:
 # ---------------------------------------------------------------------------
 # Run log (the replayable output artifact)
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
 class ChaosRunLog:
-    trace: ChaosTrace
-    rows: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
-    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    """Replayable run artifact: a view over a telemetry ``Tracker``.
+
+    ``append(**row)`` adapts the legacy row shape into a typed
+    ``ChaosStepEvent`` and emits it on the tracker; the ``rows`` property
+    reconstructs the legacy dicts bit-for-bit, so golden fixtures and the
+    ``to_json``/``from_json`` wire format are unchanged.  Drift/refit
+    events from the streaming-model layer land on the *same* tracker but
+    are kind-filtered out of ``rows`` (and hence out of signatures)."""
+
+    EVENT_KIND = "chaos_step"
+    LOG_TYPE = "chaos"
+
+    def __init__(self, trace: ChaosTrace,
+                 rows: Optional[List[Dict[str, Any]]] = None,
+                 meta: Optional[Dict[str, Any]] = None,
+                 tracker: Optional[Tracker] = None):
+        self.trace = trace
+        self.meta: Dict[str, Any] = dict(meta) if meta else {}
+        self.tracker = tracker if tracker is not None else Tracker([MemorySink()])
+        for row in rows or []:
+            self.append(**row)
 
     def append(self, **row) -> None:
-        self.rows.append(row)
+        self.tracker.emit(from_legacy(self.EVENT_KIND, row))
+
+    def emit(self, event: Event) -> Event:
+        """Emit a non-row event (drift, refit, ...) onto the run's bus."""
+        return self.tracker.emit(event)
+
+    # ------------------------------------------------------------------
+    @property
+    def rows(self) -> List[Dict[str, Any]]:
+        return [e.to_legacy() for e in self.tracker.events(self.EVENT_KIND)]
+
+    def events(self, kind: Optional[str] = None) -> List[Event]:
+        """Typed events on the run's bus (all kinds unless filtered)."""
+        return self.tracker.events(kind)
 
     # ------------------------------------------------------------------
     def signature(self) -> List[tuple]:
@@ -291,7 +331,10 @@ class ChaosRunLog:
                    if r.get("decision", "").startswith("resize"))
 
     def final_wall_clock(self) -> float:
-        return self.rows[-1]["wall_s"] if self.rows else 0.0
+        warn_deprecated(f"{type(self).__name__}.final_wall_clock()",
+                        'events("chaos_step")[-1].wall_s')
+        rows = self.rows
+        return rows[-1]["wall_s"] if rows else 0.0
 
     # ------------------------------------------------------------------
     def to_json(self) -> Dict[str, Any]:
@@ -309,6 +352,26 @@ class ChaosRunLog:
     @classmethod
     def load(cls, path) -> "ChaosRunLog":
         return cls.from_json(json.loads(Path(path).read_text()))
+
+    # ------------------------------------------------------------------
+    def to_jsonl(self, path) -> int:
+        """Dump the full event stream (with a ``run_meta`` header row that
+        makes the file self-contained for replay) as JSONL."""
+        header = RunMeta(log_type=self.LOG_TYPE, trace=self.trace.to_json(),
+                         meta=dict(self.meta))
+        return self.tracker.to_jsonl(path, header=header)
+
+    @classmethod
+    def from_jsonl(cls, path) -> "ChaosRunLog":
+        events = read_events(path)
+        if not events or events[0].kind != "run_meta":
+            raise ValueError(f"{path}: missing run_meta header row")
+        header = events[0]
+        log = cls(trace=ChaosTrace.from_json(header.trace),
+                  meta=dict(header.meta))
+        for e in events[1:]:
+            log.tracker.emit(e)
+        return log
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +402,8 @@ class ChaosLoop:
                  injector: Optional[FailureInjector] = None, *,
                  base_compute_s: float = 1.0, d: int = 32,
                  ckpt_every: int = 10, restore_cost_s: float = 5.0,
-                 relax_local_steps: int = 2, staleness_bound: int = 4):
+                 relax_local_steps: int = 2, staleness_bound: int = 4,
+                 system_refit: Optional[StreamingErnest] = None):
         self.sim = sim
         self.executor = executor
         self.controller = controller
@@ -352,6 +416,11 @@ class ChaosLoop:
         self.restore_cost_s = restore_cost_s
         self.relax_local_steps = relax_local_steps
         self.staleness_bound = staleness_bound
+        # opt-in streaming f(m) refit: feed measured step times to a
+        # StreamingErnest wrapping the controller's own system model (fit()
+        # mutates in place, so refits flow straight into resize planning);
+        # drift/refit events land on the run log's bus, not in its rows
+        self.system_refit = system_refit
         self._base_m_options = list(controller.m_options)
         self._relaxed: Dict[int, int] = {}   # host -> step relaxation began
         self.wall_s = 0.0
@@ -452,6 +521,12 @@ class ChaosLoop:
                                         self.d, sync_mask=mask)
             self.wall_s += step_s
             row.update(objective=objective, step_s=round(step_s, 9))
+
+            if self.system_refit is not None:
+                for ev in self.system_refit.observe(
+                        step, self.executor.m, self.controller.data_size,
+                        step_s):
+                    log.emit(ev)
 
             # straggler detection + mitigation
             host_times = self.sim.host_times(self.executor.m,

@@ -58,6 +58,13 @@ from repro.serve.paging import SCRATCH_PAGE, PagePool
 from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.speculate import NgramProposer
+from repro.telemetry import (
+    Event,
+    MemorySink,
+    ServeStepEvent,
+    Tracker,
+    warn_deprecated,
+)
 
 
 class ServeEngine:
@@ -168,7 +175,10 @@ class ServeEngine:
         )
         self.step_count = 0
         self._rid = 0
-        self.telemetry: List[Dict] = []
+        # every step timing rides the telemetry bus as a ServeStepEvent;
+        # the deprecated ``telemetry`` property reconstructs legacy rows
+        self.tracker = Tracker([MemorySink()])
+        self._t_s = 0.0
 
     @staticmethod
     def config_for(arch: str, smoke: bool):
@@ -303,15 +313,7 @@ class ServeEngine:
         dt = time.perf_counter() - t0
         req.prefill_s += dt
         req.prefill_pos += n_tokens
-        self.telemetry.append(
-            {
-                "step": self.step_count,
-                "batch": 0,
-                "step_s": dt,
-                "kind": "prefill",
-                "prefill_tokens": n_tokens,
-            }
-        )
+        self._emit("prefill", batch=0, step_s=dt, prefill_tokens=n_tokens)
         if req.prefill_pos >= len(req.prompt):
             logits = np.asarray(logits_dev[0, n_tokens - 1])
             if self.prefix is not None:
@@ -375,14 +377,8 @@ class ServeEngine:
         )
         logits_np = np.asarray(logits_dev)
         dt = time.perf_counter() - t0
-        self.telemetry.append(
-            {
-                "step": self.step_count,
-                "batch": len(decoding),
-                "step_s": dt,
-                "kind": "decode",
-                "committed": len(decoding),
-            }
+        self._emit(
+            "decode", batch=len(decoding), step_s=dt, committed=len(decoding)
         )
         for req in decoding:
             slot = req.slot
@@ -490,15 +486,12 @@ class ServeEngine:
                 slot = req.slot
                 self.scheduler.finish(req, self.step_count)
                 self._release_slot(slot)
-        self.telemetry.append(
-            {
-                "step": self.step_count,
-                "batch": len(decoding),
-                "step_s": dt,
-                "kind": "verify",
-                "committed": total_committed,
-                "drafted": total_drafted,
-            }
+        self._emit(
+            "verify",
+            batch=len(decoding),
+            step_s=dt,
+            committed=total_committed,
+            drafted=total_drafted,
         )
         return len(decoding)
 
@@ -511,11 +504,51 @@ class ServeEngine:
         return self.stats()
 
     # ------------------------------------------------------------------
+    def _emit(
+        self,
+        op: str,
+        *,
+        batch: int,
+        step_s: float,
+        committed: int = 0,
+        drafted: int = 0,
+        prefill_tokens: int = 0,
+    ) -> None:
+        self._t_s += step_s
+        self.tracker.emit(
+            ServeStepEvent(
+                step=self.step_count,
+                step_s=step_s,
+                op=op,
+                batch=batch,
+                committed=committed,
+                drafted=drafted,
+                prefill_tokens=prefill_tokens,
+                t_s=self._t_s,
+            )
+        )
+
+    def events(self, kind: Optional[str] = None) -> List[Event]:
+        """Typed events on the engine's bus (``serve_step`` rows)."""
+        return self.tracker.events(kind)
+
+    def to_jsonl(self, path) -> int:
+        """Dump the engine's event stream as JSONL."""
+        return self.tracker.to_jsonl(path)
+
+    @property
+    def telemetry(self) -> List[Dict]:
+        """Deprecated: legacy row dicts; use ``events()`` instead."""
+        warn_deprecated("ServeEngine.telemetry", 'ServeEngine.events("serve_step")')
+        return [e.to_legacy() for e in self.tracker.events("serve_step")]
+
+    # ------------------------------------------------------------------
     def stats(self) -> Dict:
-        steps = [t for t in self.telemetry if t["batch"] > 0]
-        tok = sum(t.get("committed", t["batch"]) for t in steps)
-        busy = sum(t["step_s"] for t in steps)
-        batch_tok = sum(t["batch"] for t in steps)
+        evs = self.events("serve_step")
+        steps = [e for e in evs if e.batch > 0]
+        tok = sum(e.committed for e in steps)
+        busy = sum(e.step_s for e in steps)
+        batch_tok = sum(e.batch for e in steps)
         out: Dict = {
             "requests_finished": len(self.scheduler.finished),
             "decode_steps": len(steps),
@@ -530,11 +563,9 @@ class ServeEngine:
             out["prefix_pages_shared"] = self.prefix.pages_shared
             out["prefills_skipped"] = self.prefix.prefills_skipped
         if self.prefill_chunk is not None:
-            chunk_rows = [t for t in self.telemetry if t.get("kind") == "prefill"]
-            out["prefill_chunks"] = len(chunk_rows)
-            out["prefill_chunk_tokens"] = sum(
-                t["prefill_tokens"] for t in chunk_rows
-            )
+            chunks = [e for e in evs if e.op == "prefill"]
+            out["prefill_chunks"] = len(chunks)
+            out["prefill_chunk_tokens"] = sum(e.prefill_tokens for e in chunks)
         if self.proposer is not None:
             out["draft_proposed"] = self.proposer.proposed_tokens
             out["draft_accepted"] = self.proposer.accepted_tokens

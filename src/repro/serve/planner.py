@@ -70,25 +70,46 @@ class CapacityPlanner:
     def observe(self, batch: int, step_s: float) -> None:
         self.observations.append(ServeObservation(int(batch), float(step_s)))
 
-    def observe_telemetry(self, telemetry: Sequence[Dict]) -> None:
-        """Ingest ``ServeEngine.telemetry`` rows ({batch, step_s, ...}).
+    def ingest(self, events, *, n_layers: int = 1, overhead_s: float = 0.0) -> int:
+        """THE telemetry entrypoint: feed typed bus events, dispatch on kind.
 
-        Decode and draft-verify rows feed the f(b) step model plus the
-        measured accepted-tokens-per-slot-step multiplier; chunked-prefill
-        rows ({kind: "prefill", prefill_tokens, step_s}) feed the prefill
-        throughput estimate.  Rows from pre-speculation engines (no ``kind``
-        key) are ingested as plain one-token decode steps."""
-        for row in telemetry:
-            if row.get("kind") == "prefill":
-                self._prefill_tokens += float(row.get("prefill_tokens", 0))
-                self._prefill_s += float(row["step_s"])
-                continue
-            if row["batch"] > 0:
-                self.observe(row["batch"], row["step_s"])
-                self._committed_tokens += float(
-                    row.get("committed", row["batch"])
-                )
-                self._slot_steps += float(row["batch"])
+        * ``serve_step`` — decode and draft-verify steps feed the f(b) step
+          model plus the measured accepted-tokens-per-slot-step multiplier;
+          chunked-prefill steps feed the prefill throughput estimate.
+        * ``tune`` — autotuner results for the paged decode kernel seed the
+          step model from measured kernel timings: one decode step is
+          approximated as ``n_layers * kernel + overhead_s``.
+
+        Other kinds are ignored, so an entire run log can be replayed in.
+        Returns the number of events that contributed observations."""
+        n = 0
+        for ev in events:
+            kind = getattr(ev, "kind", None)
+            if kind == "serve_step":
+                if ev.op == "prefill":
+                    self._prefill_tokens += float(ev.prefill_tokens)
+                    self._prefill_s += float(ev.step_s)
+                    n += 1
+                elif ev.batch > 0:
+                    self.observe(ev.batch, ev.step_s)
+                    self._committed_tokens += float(ev.committed)
+                    self._slot_steps += float(ev.batch)
+                    n += 1
+            elif kind == "tune":
+                if ev.family == "flash_decode_paged" and ev.shape.get("b", 0) > 0:
+                    step_s = n_layers * ev.us_per_call * 1e-6 + overhead_s
+                    self.observe(int(ev.shape["b"]), step_s)
+                    n += 1
+        return n
+
+    def observe_telemetry(self, telemetry: Sequence[Dict]) -> None:
+        """Thin legacy wrapper over :meth:`ingest` for ``ServeEngine``
+        row dicts ({batch, step_s, ...}).  Rows from pre-speculation
+        engines (no ``kind`` key) are ingested as plain one-token decode
+        steps."""
+        from repro.telemetry import from_legacy
+
+        self.ingest(from_legacy("serve_step", row) for row in telemetry)
 
     @property
     def accepted_per_slot_step(self) -> float:
@@ -108,17 +129,28 @@ class CapacityPlanner:
     def observe_tuned_kernels(
         self, rows: Sequence[Dict], *, n_layers: int = 1, overhead_s: float = 0.0
     ) -> int:
-        """Seed the step model from autotuner-measured kernel timings
-        (``repro.kernels.tune.decode_step_rows``): one decode step is
-        approximated as ``n_layers * kernel + overhead``.  Lets f(b) be
-        fitted from measured kernel costs before (or instead of) live
-        engine telemetry.  Returns the number of rows ingested."""
-        n = 0
-        for row in rows:
-            if row["batch"] > 0:
-                self.observe(row["batch"], n_layers * row["step_s"] + overhead_s)
-                n += 1
-        return n
+        """Thin legacy wrapper over :meth:`ingest` for
+        ``repro.kernels.tune.decode_step_rows`` dicts ({batch, step_s}):
+        each row becomes a ``tune`` event for the paged decode kernel.
+        Returns the number of rows ingested."""
+        from repro.telemetry import TuneEvent
+
+        return self.ingest(
+            (
+                TuneEvent(
+                    family="flash_decode_paged",
+                    shape={"b": int(row["batch"])},
+                    dtype="",
+                    backend="",
+                    config={},
+                    us_per_call=float(row["step_s"]) * 1e6,
+                )
+                for row in rows
+                if row["batch"] > 0
+            ),
+            n_layers=n_layers,
+            overhead_s=overhead_s,
+        )
 
     def fit(self) -> "CapacityPlanner":
         if len({o.batch for o in self.observations}) < 2:

@@ -1,0 +1,97 @@
+"""repro.telemetry — the typed tracker bus + streaming model refits.
+
+One emit/sink API for every measurement the repo produces (DESIGN.md
+§12).  The four pre-bus log formats — kernel tune cache rows, serve
+engine step telemetry, chaos run logs, fleet tick logs — are now views
+over a single typed event stream:
+
+    from repro.telemetry import Tracker, JSONLSink, MemorySink
+
+    tracker = Tracker([MemorySink(), JSONLSink("run.jsonl")])
+    tracker.emit(ChaosStepEvent(step=0, m=2, objective=1.5))
+    tracker.flush()
+
+Inspect a log from the shell::
+
+    python -m repro.telemetry summarize run.jsonl
+"""
+
+from .events import (
+    SCHEMA_VERSION,
+    ChaosStepEvent,
+    DriftDetected,
+    Event,
+    FleetTickEvent,
+    RefitEvent,
+    RunMeta,
+    SchemaError,
+    ServeStepEvent,
+    TuneEvent,
+    from_dict,
+    from_legacy,
+    registered_kinds,
+)
+from .io import (
+    append_jsonl,
+    atomic_write_json,
+    atomic_write_text,
+    file_lock,
+    read_jsonl,
+)
+from .refit import (
+    DriftConfig,
+    DriftDetector,
+    StreamingCapacity,
+    StreamingConvergence,
+    StreamingErnest,
+)
+from .tracker import (
+    JSONLSink,
+    MemorySink,
+    Sink,
+    StatsSink,
+    Tracker,
+    default_tracker,
+    log_from_device,
+    read_events,
+    reset_deprecation_warnings,
+    set_default_tracker,
+    warn_deprecated,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ChaosStepEvent",
+    "DriftConfig",
+    "DriftDetected",
+    "DriftDetector",
+    "Event",
+    "FleetTickEvent",
+    "JSONLSink",
+    "MemorySink",
+    "RefitEvent",
+    "RunMeta",
+    "SchemaError",
+    "ServeStepEvent",
+    "Sink",
+    "StatsSink",
+    "StreamingCapacity",
+    "StreamingConvergence",
+    "StreamingErnest",
+    "Tracker",
+    "TuneEvent",
+    "append_jsonl",
+    "atomic_write_json",
+    "atomic_write_text",
+    "default_tracker",
+    "file_lock",
+    "from_dict",
+    "from_legacy",
+    "log_from_device",
+    "read_events",
+    "read_jsonl",
+    "registered_kinds",
+    "reset_deprecation_warnings",
+    "set_default_tracker",
+    "warn_deprecated",
+]

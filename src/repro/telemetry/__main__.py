@@ -1,0 +1,58 @@
+"""CLI: inspect a telemetry JSONL event log.
+
+    python -m repro.telemetry summarize run.jsonl [--strict]
+
+Prints per-kind counts plus min/mean/max of every numeric field.  With
+``--strict``, any schema-invalid row fails the command (exit 1) — the CI
+telemetry smoke step uses this to assert a fresh run log is well-formed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .events import SchemaError, from_dict
+from .tracker import StatsSink
+
+
+def summarize(path: str, strict: bool = False) -> int:
+    stats = StatsSink()
+    bad = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                stats.write(from_dict(json.loads(line)))
+            except (SchemaError, json.JSONDecodeError) as e:
+                bad += 1
+                print(f"{path}:{lineno}: invalid row: {e}", file=sys.stderr)
+    for kind, info in stats.summary().items():
+        print(f"{kind:<12} n={info['count']}")
+        for name, agg in info["fields"].items():
+            print(
+                f"  {name:<16} mean={agg['mean']:.6g} "
+                f"min={agg['min']:.6g} max={agg['max']:.6g}"
+            )
+    total = sum(stats.counts.values())
+    print(f"total        {total} events, {bad} invalid rows")
+    return 1 if (strict and bad) else 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.telemetry")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_sum = sub.add_parser("summarize", help="per-kind stats for a JSONL event log")
+    p_sum.add_argument("path")
+    p_sum.add_argument("--strict", action="store_true", help="exit 1 on schema-invalid rows")
+    args = parser.parse_args(argv)
+    if args.cmd == "summarize":
+        return summarize(args.path, strict=args.strict)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

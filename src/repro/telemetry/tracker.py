@@ -1,0 +1,235 @@
+"""Tracker facade + composable sinks.
+
+A ``Tracker`` is the single write API for telemetry: every subsystem
+calls ``tracker.emit(event)`` and the attached sinks decide what happens
+— keep it in memory (``MemorySink``), append it to a JSONL file with an
+atomic write (``JSONLSink``), or fold it into running aggregates
+(``StatsSink``).  Sinks are tiny and composable; a tracker with a
+memory sink is the in-process default so existing run logs keep their
+``rows``-style readers as thin views over the event stream.
+
+``log_from_device`` bridges jit-compiled code to the bus via
+``jax.debug.callback`` — host-side emission that stays off the hot path
+(the callback fires asynchronously and carries only small scalars).
+"""
+
+from __future__ import annotations
+
+import json
+import warnings
+from collections import deque
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+from . import io as tio
+from .events import Event, from_dict
+
+
+class Sink:
+    """Interface for event consumers attached to a Tracker."""
+
+    def write(self, event: Event) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        self.flush()
+
+
+class MemorySink(Sink):
+    """Keep events in memory (optionally a bounded ring)."""
+
+    def __init__(self, maxlen: Optional[int] = None):
+        self._events: deque = deque(maxlen=maxlen)
+
+    def write(self, event: Event) -> None:
+        self._events.append(event)
+
+    def events(self, kind: Optional[str] = None) -> List[Event]:
+        if kind is None:
+            return list(self._events)
+        return [e for e in self._events if e.kind == kind]
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+
+class JSONLSink(Sink):
+    """Buffer events and flush them to a JSONL file via atomic append."""
+
+    def __init__(self, path, flush_every: int = 64):
+        self.path = path
+        self.flush_every = max(1, int(flush_every))
+        self._buf: List[str] = []
+        self.written = 0
+
+    def write(self, event: Event) -> None:
+        self._buf.append(json.dumps(event.to_dict(), sort_keys=True))
+        if len(self._buf) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        if self._buf:
+            self.written += tio.append_jsonl(self.path, self._buf)
+            self._buf = []
+
+
+class StatsSink(Sink):
+    """Fold events into per-kind counts and numeric-field aggregates."""
+
+    def __init__(self):
+        self.counts: Dict[str, int] = {}
+        self._sums: Dict[str, Dict[str, float]] = {}
+        self._mins: Dict[str, Dict[str, float]] = {}
+        self._maxs: Dict[str, Dict[str, float]] = {}
+
+    def write(self, event: Event) -> None:
+        k = event.kind
+        self.counts[k] = self.counts.get(k, 0) + 1
+        sums = self._sums.setdefault(k, {})
+        mins = self._mins.setdefault(k, {})
+        maxs = self._maxs.setdefault(k, {})
+        for name, v in event.to_dict().items():
+            if name in ("kind", "v") or isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            sums[name] = sums.get(name, 0.0) + v
+            mins[name] = min(mins.get(name, v), v)
+            maxs[name] = max(maxs.get(name, v), v)
+
+    def summary(self) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        for k, n in sorted(self.counts.items()):
+            fields = {}
+            for name, s in sorted(self._sums[k].items()):
+                fields[name] = {
+                    "mean": s / n,
+                    "min": self._mins[k][name],
+                    "max": self._maxs[k][name],
+                }
+            out[k] = {"count": n, "fields": fields}
+        return out
+
+
+class Tracker:
+    """The one emit API.  Fans each event out to every attached sink."""
+
+    def __init__(self, sinks: Optional[Sequence[Sink]] = None):
+        if sinks is None:
+            sinks = [MemorySink()]
+        self.sinks: List[Sink] = list(sinks)
+
+    # -- write side ---------------------------------------------------------
+
+    def emit(self, event: Event) -> Event:
+        for s in self.sinks:
+            s.write(event)
+        return event
+
+    def emit_many(self, events: Iterable[Event]) -> int:
+        n = 0
+        for e in events:
+            self.emit(e)
+            n += 1
+        return n
+
+    def flush(self) -> None:
+        for s in self.sinks:
+            s.flush()
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+    # -- read side (delegates to the first capable sink) --------------------
+
+    def _memory(self) -> Optional[MemorySink]:
+        for s in self.sinks:
+            if isinstance(s, MemorySink):
+                return s
+        return None
+
+    def events(self, kind: Optional[str] = None) -> List[Event]:
+        mem = self._memory()
+        if mem is None:
+            return []
+        return mem.events(kind)
+
+    def summary(self) -> Dict[str, Dict[str, Any]]:
+        for s in self.sinks:
+            if isinstance(s, StatsSink):
+                return s.summary()
+        stats = StatsSink()
+        for e in self.events():
+            stats.write(e)
+        return stats.summary()
+
+    def to_jsonl(self, path, header: Optional[Event] = None) -> int:
+        """Dump buffered events (plus optional header) to a JSONL file."""
+        events: List[Event] = list(self.events())
+        if header is not None:
+            events = [header] + events
+        return tio.append_jsonl(path, [json.dumps(e.to_dict(), sort_keys=True) for e in events])
+
+
+def read_events(path) -> List[Event]:
+    """Parse a JSONL event log back into typed events."""
+    return [from_dict(d) for d in tio.read_jsonl(path)]
+
+
+def log_from_device(tracker: Tracker, make_event: Callable[..., Event], *args: Any) -> None:
+    """Emit an event from inside jit-compiled code.
+
+    ``make_event`` runs host-side under ``jax.debug.callback`` with the
+    traced ``args`` materialized as concrete arrays; it must build the
+    Event (converting scalars with ``int``/``float``).  Keep this off
+    per-step hot paths — it is for sparse diagnostics, not inner loops.
+    """
+    import jax  # local import: the bus itself has no jax dependency
+
+    def _cb(*vals):
+        tracker.emit(make_event(*vals))
+
+    jax.debug.callback(_cb, *args)
+
+
+_DEFAULT: Optional[Tracker] = None
+
+
+def default_tracker() -> Tracker:
+    """Process-wide tracker for emitters with no explicit bus wired in."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Tracker([MemorySink(maxlen=4096)])
+    return _DEFAULT
+
+
+def set_default_tracker(tracker: Optional[Tracker]) -> Optional[Tracker]:
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = tracker
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# one-release deprecation shim helper
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Warn once per process that ``old`` is deprecated in favor of ``new``."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated and will be removed next release; use {new} instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset_deprecation_warnings() -> None:
+    """Test hook: make every deprecation warn again."""
+    _WARNED.clear()

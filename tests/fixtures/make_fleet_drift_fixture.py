@@ -1,0 +1,36 @@
+"""Regenerate fleet_drift_seed0.json — the golden run log for the
+streaming-refit drift scenario at seed 0 (drift detection ON).
+
+The fixture pins the closed measure->model->decide loop end to end: the
+DriftDetector firing a few ticks after the injected 2x slowdown, the
+pace-model refit from the new-regime window, and the forced replanning
+pass rescuing the deadline.  A change to the detector thresholds, the
+refit math, or the scheduler's rescue policy shows up as a diff in the
+decision sequence — a deliberate behavior change regenerates the fixture
+with this script, an accidental one fails the golden test.
+
+  PYTHONPATH=src python tests/fixtures/make_fleet_drift_fixture.py
+"""
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent / "fleet_drift_seed0.json"
+
+
+def main():
+    from repro.fleet import replay, run_fleet_sim
+
+    log = run_fleet_sim(0, scenario="drift", drift=True)
+    again = replay(log)
+    assert again.signature() == log.signature(), \
+        "refusing to write a fixture that does not replay bit-identically"
+    assert log.decisions("drift:"), "scenario no longer triggers the detector"
+    assert log.decisions("resize:"), "drift no longer forces a replan"
+    job = log.meta["summary"]["jobs"]["job_drift"]
+    assert job["state"] == "done" and job["met_deadline"], \
+        "the drift-aware arm must rescue the deadline"
+    log.save(OUT)
+    print(f"{len(log.rows)} ticks, {log.n_decisions()} decisions -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

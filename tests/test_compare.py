@@ -36,10 +36,21 @@ def test_exit_1_on_regression(tmp_path):
     base = write(tmp_path, "base.json", BASE)
     cur = write(tmp_path, "cur.json",
                 [("core/lasso_cv", 200_000.0),   # 4x > 2.5x
-                 ("serve/schedule", 8_000.0)])
+                 ("serve/schedule", 8_000.0),
+                 ("serve/tiny", 12.0)])
     assert compare.main([base, cur]) == 1
     # a looser gate lets the same payload pass
     assert compare.main([base, cur, "--max-ratio", "5.0"]) == 0
+
+
+def test_exit_1_on_vanished_serve_row(tmp_path, capsys):
+    # serve/* baseline rows are REQUIRED to persist: a vanished row fails
+    # like a regression even when every surviving row is within ratio
+    base = write(tmp_path, "base.json", BASE)
+    cur = write(tmp_path, "cur.json",
+                [("core/lasso_cv", 50_000.0), ("serve/schedule", 8_000.0)])
+    assert compare.main([base, cur]) == 1
+    assert "serve/tiny" in capsys.readouterr().out
 
 
 def test_exit_1_on_new_error_row(tmp_path):
@@ -73,8 +84,10 @@ def test_exit_2_when_no_comparable_rows(tmp_path):
 
 @pytest.mark.parametrize("missing_side", ["baseline_only", "current_only"])
 def test_one_sided_rows_reported_not_gated(tmp_path, missing_side, capsys):
+    # one-sided rows outside REQUIRED_PREFIXES are reported, never gated
+    # (baseline-only serve/* rows ARE gated — see the vanished-row test)
     rows = [("core/lasso_cv", 50_000.0), ("serve/schedule", 8_000.0)]
-    extra = [("serve/new_bench", 99_000.0)]
+    extra = [("core/new_bench", 99_000.0)]
     base = write(tmp_path, "base.json",
                  rows + (extra if missing_side == "baseline_only" else []))
     cur = write(tmp_path, "cur.json",

@@ -1,0 +1,129 @@
+"""Streaming refits closing the fleet loop: the drift scenario.
+
+A sustained 2x cluster-wide slowdown hits mid-run.  With
+``FleetConfig.drift`` on, the scheduler's per-job DriftDetector fires
+within a few ticks of onset, refits the job's pace factor from the
+new-regime window (``RefitEvent.residual_after < residual_before``), and
+forces a replanning pass that rescues the deadline.  The control arm
+(``drift=False``) runs the identical scenario open-loop and misses.
+
+Golden fixture: fleet_drift_seed0.json (regenerate with
+tests/fixtures/make_fleet_drift_fixture.py).  Replay guarantees mirror
+tests/test_fleet.py: in-process replay is BIT-identical on the full
+signature — including replay reconstructed from the JSONL event log.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.fleet import (
+    FleetRunLog,
+    build_drift_scenario,
+    replay,
+    run_fleet_sim,
+)
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+
+@pytest.fixture(scope="module")
+def drift_run():
+    return run_fleet_sim(0, scenario="drift", drift=True)
+
+
+@pytest.fixture(scope="module")
+def control_run():
+    return run_fleet_sim(0, scenario="drift", drift=False)
+
+
+# ------------------------------------------------------- the closed loop
+def test_drift_run_detects_and_replans(drift_run):
+    """Detector fires a few ticks after the injected slowdown (not before)
+    and the very next tick carries a deadline-rescue resize."""
+    onset = min(e.step for e in drift_run.trace.events
+                if e.kind == "slowdown")
+    drifts = drift_run.decisions("drift:job_drift")
+    assert drifts, "no drift decision recorded"
+    first = drifts[0][0]
+    assert onset <= first <= onset + 8, (onset, first)
+    rescues = [(s, d) for s, d in drift_run.decisions("resize:job_drift")
+               if d.endswith(":deadline") and s > first]
+    assert rescues and rescues[0][0] <= first + 2, rescues
+
+
+def test_drift_arm_meets_deadline_control_misses(drift_run, control_run):
+    drifted = drift_run.meta["summary"]["jobs"]["job_drift"]
+    control = control_run.meta["summary"]["jobs"]["job_drift"]
+    assert drifted["state"] == "done" and drifted["met_deadline"]
+    assert control["state"] == "done" and not control["met_deadline"]
+    # the open-loop arm never sees the drift; its model only notices via
+    # lagging progress, tens of ticks later
+    assert not control_run.decisions("drift:")
+    late = control_run.decisions("resize:job_drift")
+    first_drift = drift_run.decisions("drift:")[0][0]
+    assert all(s > first_drift + 20 for s, _ in late), late
+
+
+def test_refit_reduces_residuals(drift_run):
+    """Every RefitEvent on the bus fits the new regime better than the
+    stale model that triggered it, and pairs with a DriftDetected."""
+    refits = drift_run.events("refit")
+    detected = drift_run.events("drift")
+    assert refits and len(refits) == len(detected)
+    for det, ref in zip(detected, refits):
+        assert det.step == ref.step and det.model == ref.model
+        assert ref.residual_before == pytest.approx(det.residual)
+        assert ref.residual_after < ref.residual_before
+        assert det.residual > det.threshold
+
+
+def test_drift_events_stay_out_of_rows(drift_run):
+    """Drift/refit telemetry rides the same bus but never leaks into the
+    row stream or signatures (so pre-drift goldens stay comparable)."""
+    kinds = {e.kind for e in drift_run.events()}
+    assert {"fleet_tick", "drift", "refit"} <= kinds
+    assert len(drift_run.rows) == len(drift_run.events("fleet_tick"))
+    assert all(r.keys() == drift_run.rows[0].keys()
+               for r in drift_run.rows)
+
+
+# ------------------------------------------------------- replay + golden
+def test_drift_replay_is_bit_identical(drift_run):
+    again = replay(drift_run)
+    assert again.signature() == drift_run.signature()
+    assert again.meta["summary"] == drift_run.meta["summary"]
+
+
+def test_drift_replay_from_event_log(drift_run, tmp_path):
+    """to_jsonl -> from_jsonl -> replay: the JSONL event log alone (header
+    + typed events) reconstructs a log that replays bit-identically."""
+    p = tmp_path / "drift.jsonl"
+    drift_run.to_jsonl(p)
+    back = FleetRunLog.from_jsonl(p)
+    assert back.signature() == drift_run.signature()
+    assert ([e.to_dict() for e in back.events()]
+            == [e.to_dict() for e in drift_run.events()])
+    again = replay(back)
+    assert again.signature() == drift_run.signature()
+
+
+def test_golden_drift_trace(drift_run):
+    """The checked-in golden drift log replays exactly on the control
+    sequence and to float tolerance on modeled quantities."""
+    golden = FleetRunLog.load(FIXTURES / "fleet_drift_seed0.json")
+    assert drift_run.control_signature() == golden.control_signature()
+    for got, want in zip(drift_run.rows, golden.rows):
+        for name, wj in want["jobs"].items():
+            gj = got["jobs"][name]
+            assert gj["prog"] == pytest.approx(wj["prog"], rel=1e-6,
+                                               abs=1e-9)
+        assert got["cost_hh"] == pytest.approx(want["cost_hh"], rel=1e-9)
+
+
+def test_golden_drift_fixture_is_self_consistent():
+    """The fixture's embedded trace regenerates from the scenario builder
+    at its recorded seed — golden files cannot drift from the generator."""
+    golden = FleetRunLog.load(FIXTURES / "fleet_drift_seed0.json")
+    regen, _, _, _ = build_drift_scenario(int(golden.meta["seed"]))
+    assert regen == golden.trace
+    assert golden.meta["scenario"] == "drift" and golden.meta["drift"]

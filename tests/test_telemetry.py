@@ -1,0 +1,431 @@
+"""The telemetry bus: typed events, sinks, atomic IO, streaming refits.
+
+Covers the PR-7 contract end to end: the four legacy row shapes
+round-trip bit-for-bit through their typed events (golden traces depend
+on it), sinks compose under one ``Tracker.emit``, the atomic IO helpers
+survive concurrent writers (real subprocesses, not threads — the race
+they fix was cross-process), ``log_from_device`` emits from jit, the
+one-release deprecation shims warn exactly once, and the drift detector
++ streaming refit wrappers behave: quiet on stationary noise, firing
+within a window of a sustained 2x slowdown, and leaving the refit model
+with lower residuals than the stale one.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.telemetry import (
+    ChaosStepEvent,
+    DriftConfig,
+    DriftDetector,
+    JSONLSink,
+    MemorySink,
+    RunMeta,
+    SchemaError,
+    ServeStepEvent,
+    StatsSink,
+    StreamingErnest,
+    Tracker,
+    TuneEvent,
+    append_jsonl,
+    atomic_write_json,
+    from_dict,
+    from_legacy,
+    read_events,
+    read_jsonl,
+    registered_kinds,
+    reset_deprecation_warnings,
+    warn_deprecated,
+)
+from repro.telemetry.tracker import log_from_device
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ----------------------------------------------------------- event schema
+def test_all_kinds_registered():
+    assert set(registered_kinds()) >= {
+        "tune", "serve_step", "chaos_step", "fleet_tick",
+        "drift", "refit", "run_meta",
+    }
+
+
+TUNE_ROW = {
+    "family": "flash_decode_paged",
+    "shape": {"b": 4, "d": 64},
+    "dtype": "float32",
+    "backend": "cpu",
+    "config": {"block_b": 4},
+    "us_per_call": 12.5,
+    "candidates_swept": 6,
+    "candidates_pruned": 2,
+}
+
+SERVE_ROWS = [
+    {"step": 0, "batch": 0, "step_s": 0.01, "kind": "prefill",
+     "prefill_tokens": 128},
+    {"step": 1, "batch": 4, "step_s": 0.002, "kind": "decode",
+     "committed": 4},
+    {"step": 2, "batch": 4, "step_s": 0.003, "kind": "verify",
+     "committed": 9, "drafted": 12},
+]
+
+CHAOS_ROWS = [
+    # a restore row has no step_s/objective — to_legacy must NOT invent
+    # the keys, or golden signatures change
+    {"step": 3, "m": 4, "events": ["preempt:1"], "restore": True,
+     "wall_s": 12.0},
+    {"step": 4, "m": 4, "events": [], "objective": 0.5, "step_s": 1.5,
+     "wall_s": 13.5, "decision": "resize:8", "custom": 7},
+]
+
+
+@pytest.mark.parametrize("kind,row", [
+    ("tune", TUNE_ROW),
+    *[("serve_step", r) for r in SERVE_ROWS],
+    *[("chaos_step", r) for r in CHAOS_ROWS],
+])
+def test_legacy_round_trip_is_exact(kind, row):
+    """legacy -> event -> legacy reproduces the dict bit-for-bit, and the
+    wire form (to_dict -> from_dict) preserves the event."""
+    ev = from_legacy(kind, row)
+    assert ev.to_legacy() == row
+    assert from_dict(json.loads(json.dumps(ev.to_dict()))) == ev
+
+
+def test_fleet_tick_round_trip():
+    row = {"step": 7, "events": ["slowdown:-1"], "decisions": ["drift:j"],
+           "serve": {"s": {"m": 2}}, "jobs": {"j": {"state": "running"}},
+           "free": 3, "cost_hh": 1.25}
+    ev = from_legacy("fleet_tick", row)
+    assert ev.to_legacy() == row
+    assert from_dict(ev.to_dict()) == ev
+
+
+def test_schema_rejects_unknown_and_newer():
+    with pytest.raises(SchemaError):
+        from_dict({"kind": "nope", "v": 1})
+    with pytest.raises(SchemaError):
+        from_dict({"kind": "serve_step", "v": 99, "step": 0,
+                   "step_s": 0.1, "op": "decode"})
+    with pytest.raises(SchemaError):
+        from_dict({"kind": "serve_step", "v": 1})  # missing required
+
+
+def test_unknown_keys_fold_into_extra():
+    ev = from_dict({"kind": "chaos_step", "v": 1, "step": 1, "m": 2,
+                    "events": [], "mystery": 9})
+    assert ev.extra == {"mystery": 9}
+    assert ev.to_legacy()["mystery"] == 9
+
+
+# ------------------------------------------------------------------ sinks
+def _serve_events(n):
+    return [ServeStepEvent(step=i, step_s=0.001 * (i + 1), op="decode",
+                           batch=2, committed=2) for i in range(n)]
+
+
+def test_memory_sink_ring():
+    t = Tracker([MemorySink(maxlen=4)])
+    t.emit_many(_serve_events(10))
+    evs = t.events("serve_step")
+    assert len(evs) == 4 and evs[0].step == 6
+
+
+def test_tracker_fans_out_to_all_sinks(tmp_path):
+    mem, stats = MemorySink(), StatsSink()
+    jsonl = JSONLSink(tmp_path / "t.jsonl", flush_every=3)
+    t = Tracker([mem, stats, jsonl])
+    t.emit_many(_serve_events(5))
+    assert len(mem) == 5 and stats.counts == {"serve_step": 5}
+    # buffered: 3 flushed, 2 pending until close
+    assert jsonl.written == 3
+    t.close()
+    assert jsonl.written == 5
+    back = read_events(tmp_path / "t.jsonl")
+    assert back == t.events()
+
+
+def test_stats_sink_aggregates():
+    s = StatsSink()
+    for ev in _serve_events(3):
+        s.write(ev)
+    agg = s.summary()["serve_step"]
+    assert agg["count"] == 3
+    assert agg["fields"]["step_s"]["min"] == pytest.approx(0.001)
+    assert agg["fields"]["step_s"]["max"] == pytest.approx(0.003)
+    assert agg["fields"]["step_s"]["mean"] == pytest.approx(0.002)
+
+
+def test_tracker_to_jsonl_with_header(tmp_path):
+    t = Tracker()
+    t.emit_many(_serve_events(2))
+    p = tmp_path / "run.jsonl"
+    t.to_jsonl(p, header=RunMeta(log_type="serve", meta={"seed": 0}))
+    back = read_events(p)
+    assert back[0].kind == "run_meta" and back[0].log_type == "serve"
+    assert back[1:] == t.events()
+
+
+# -------------------------------------------------------------- atomic io
+def test_atomic_write_json_leaves_no_tmp(tmp_path):
+    p = tmp_path / "sub" / "cache.json"
+    atomic_write_json(p, {"a": 1})
+    assert json.loads(p.read_text()) == {"a": 1}
+    assert [f.name for f in p.parent.iterdir()] == ["cache.json"]
+
+
+def test_append_jsonl_appends(tmp_path):
+    p = tmp_path / "log.jsonl"
+    assert append_jsonl(p, ['{"a": 1}']) == 1
+    assert append_jsonl(p, ['{"a": 2}', '{"a": 3}']) == 2
+    assert append_jsonl(p, []) == 0
+    assert read_jsonl(p) == [{"a": 1}, {"a": 2}, {"a": 3}]
+
+
+_APPEND_WORKER = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.telemetry import append_jsonl
+wid = int(sys.argv[1])
+for i in range(50):
+    append_jsonl({path!r}, ['{{"w": %d, "i": %d}}' % (wid, i)])
+"""
+
+
+def test_concurrent_jsonl_appenders(tmp_path):
+    """N processes hammering one JSONL file interleave whole lines only
+    (single O_APPEND write per flush)."""
+    p = tmp_path / "conc.jsonl"
+    script = _APPEND_WORKER.format(src=str(ROOT / "src"), path=str(p))
+    procs = [subprocess.Popen([sys.executable, "-c", script, str(w)])
+             for w in range(4)]
+    for pr in procs:
+        assert pr.wait(timeout=120) == 0
+    rows = read_jsonl(p)   # raises on any torn/partial line
+    assert len(rows) == 4 * 50
+    assert {(r["w"], r["i"]) for r in rows} \
+        == {(w, i) for w in range(4) for i in range(50)}
+
+
+_CACHE_WORKER = """
+import sys
+sys.path.insert(0, {src!r})
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+from repro.kernels.tune.cache import ConfigCache
+wid = sys.argv[1]
+cache = ConfigCache({path!r})
+for i in range(20):
+    key = "fam|b%s_i%d|float32|cpu" % (wid, i)
+    cache.put(key, family="fam", shape={{"b": int(wid), "i": i}},
+              dtype="float32", config={{"block": 8}}, us_per_call=1.0,
+              swept=1, pruned=0)
+    cache.save()
+"""
+
+
+def test_concurrent_tune_cache_writers(tmp_path):
+    """Two processes sweeping different keys against one cache file must
+    union their entries (merge-on-save + atomic replace), not clobber."""
+    p = tmp_path / "tune_cache.json"
+    script = _CACHE_WORKER.format(src=str(ROOT / "src"), path=str(p))
+    procs = [subprocess.Popen([sys.executable, "-c", script, str(w)])
+             for w in (1, 2)]
+    for pr in procs:
+        assert pr.wait(timeout=300) == 0
+    from repro.kernels.tune.cache import ConfigCache
+    final = ConfigCache(str(p))
+    assert len(final.entries) == 40
+    # every entry is schema-valid and adapts to a TuneEvent
+    for key in final.entries:
+        assert TuneEvent.from_legacy_row(final.entries[key]).family == "fam"
+
+
+# --------------------------------------------------------- jit-safe emits
+def test_log_from_device_under_jit():
+    import jax
+    import jax.numpy as jnp
+
+    t = Tracker()
+
+    @jax.jit
+    def step(x):
+        y = x * 2.0
+        log_from_device(
+            t,
+            lambda v: ServeStepEvent(step=0, step_s=float(v), op="decode",
+                                     batch=1, committed=1),
+            jnp.sum(y),
+        )
+        return y
+
+    out = step(jnp.ones((4,)))
+    jax.effects_barrier()
+    assert float(out.sum()) == 8.0
+    evs = t.events("serve_step")
+    assert len(evs) == 1 and evs[0].step_s == pytest.approx(8.0)
+
+
+# ------------------------------------------------------------ deprecation
+def test_deprecation_shims_warn_once():
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="old_api"):
+        warn_deprecated("old_api()", "new_api()")
+    # second call is silent (one-release shim warns once per process)
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        warn_deprecated("old_api()", "new_api()")
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        warn_deprecated("old_api()", "new_api()")
+    reset_deprecation_warnings()
+
+
+def test_legacy_accessors_are_deprecated_but_work():
+    from repro.runtime.chaos import ChaosRunLog, ChaosTrace
+
+    reset_deprecation_warnings()
+    log = ChaosRunLog(trace=ChaosTrace.generate(0, 4, 2))
+    log.append(step=0, m=2, events=[], objective=1.0, step_s=1.0,
+               wall_s=1.0)
+    with pytest.warns(DeprecationWarning, match="final_wall_clock"):
+        assert log.final_wall_clock() == 1.0
+    assert log.events("chaos_step")[-1].wall_s == 1.0
+    reset_deprecation_warnings()
+
+
+# ------------------------------------------------- drift detector + refit
+def test_detector_quiet_on_stationary_noise():
+    rng = np.random.default_rng(0)
+    det = DriftDetector("m", DriftConfig(window=16, threshold=0.3,
+                                         min_points=6, cooldown=8))
+    for step in range(200):
+        actual = 1.0 + 0.05 * rng.standard_normal()
+        assert det.observe(step, 1.0, actual) is None
+    assert det.residual() < 0.1
+
+
+def test_detector_fires_within_window_of_2x_slowdown():
+    det = DriftDetector("m", DriftConfig(window=16, threshold=0.3,
+                                         min_points=6, cooldown=8))
+    for step in range(50):
+        assert det.observe(step, 1.0, 1.0) is None
+    fired = None
+    for step in range(50, 80):
+        ev = det.observe(step, 1.0, 2.0)   # sustained 2x
+        if ev is not None:
+            fired = ev
+            break
+    assert fired is not None and fired.step <= 50 + det.cfg.window
+    assert fired.residual > fired.threshold
+    assert fired.model == "m" and fired.window == 16
+
+
+def test_detector_cooldown_suppresses_refires():
+    det = DriftDetector("m", DriftConfig(window=8, threshold=0.2,
+                                         min_points=4, cooldown=10))
+    fires = [s for s in range(40)
+             if det.observe(s, 1.0, 3.0) is not None]
+    assert fires and all(b - a >= 10 for a, b in zip(fires, fires[1:]))
+
+
+def test_streaming_ernest_refit_reduces_residuals():
+    """Feed an Ernest model fit at 1x a sustained 2x-slower stream: drift
+    fires, the in-place refit tracks the new regime, and the post-refit
+    residual beats the stale model's."""
+    from repro.core.ernest import ErnestModel
+
+    def true_time(m, size, scale=1.0):
+        return scale * (1.0 + 8.0 * size / m + 0.05 * np.log2(m))
+
+    ms = np.array([1, 2, 4, 8, 1, 2, 4, 8], dtype=float)
+    sizes = np.full_like(ms, 4.0)
+    model = ErnestModel().fit(ms, sizes, true_time(ms, sizes))
+
+    s = StreamingErnest(model, DriftConfig(window=8, threshold=0.15,
+                                           min_points=4, cooldown=4),
+                        window=16)
+    events = []
+    step = 0
+    for _ in range(4):          # healthy regime: no events
+        for m in (1, 2, 4, 8):
+            events += s.observe(step, m, 4.0, true_time(m, 4.0))
+            step += 1
+    assert events == []
+    for _ in range(8):          # everything slows 2x
+        for m in (1, 2, 4, 8):
+            events += s.observe(step, m, 4.0, true_time(m, 4.0, scale=2.0))
+            step += 1
+    kinds = [e.kind for e in events]
+    assert "drift" in kinds and "refit" in kinds
+    refits = [e for e in events if e.kind == "refit"]
+    assert all(r.residual_after < r.residual_before for r in refits)
+    # successive refits converge onto the new regime as old points age out
+    assert refits[-1].residual_after < 0.15
+    # the wrapped model itself was refit in place onto the new regime
+    pred = float(np.asarray(model.predict(np.array([4.0]),
+                                          np.array([4.0])))[0])
+    assert pred == pytest.approx(true_time(4, 4.0, scale=2.0), rel=0.1)
+
+
+# -------------------------------------------------------- planner.ingest
+def test_planner_ingest_dispatches_on_kind():
+    from repro.serve.planner import CapacityPlanner
+
+    planner = CapacityPlanner()
+    events = [
+        ServeStepEvent(step=0, step_s=0.01, op="prefill", prefill_tokens=64),
+        ServeStepEvent(step=1, step_s=0.002, op="decode", batch=2,
+                       committed=2),
+        ServeStepEvent(step=2, step_s=0.003, op="verify", batch=4,
+                       committed=9, drafted=12),
+        TuneEvent(family="flash_decode_paged", shape={"b": 8}, dtype="f32",
+                  backend="cpu", config={}, us_per_call=4000.0),
+        TuneEvent(family="flash_attention", shape={"b": 8}, dtype="f32",
+                  backend="cpu", config={}, us_per_call=1.0),  # ignored
+        RunMeta(log_type="serve"),                              # ignored
+    ]
+    n = planner.ingest(events, n_layers=2)
+    assert n == 4
+    assert len(planner.observations) == 3
+    assert planner.prefill_tokens_per_s == pytest.approx(6400.0)
+    assert planner.accepted_per_slot_step == pytest.approx(11 / 6)
+    planner.fit()
+    assert planner.step_time(4) > 0
+
+
+def test_planner_legacy_wrappers_match_ingest():
+    from repro.serve.planner import CapacityPlanner
+
+    rows = [r for r in SERVE_ROWS]
+    a, b = CapacityPlanner(), CapacityPlanner()
+    a.ingest(from_legacy("serve_step", r) for r in rows)
+    b.observe_telemetry(rows)
+    assert [(o.batch, o.step_s) for o in a.observations] \
+        == [(o.batch, o.step_s) for o in b.observations]
+    assert a.accepted_per_slot_step == b.accepted_per_slot_step
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_summarize(tmp_path, capsys):
+    from repro.telemetry.__main__ import summarize
+
+    p = tmp_path / "run.jsonl"
+    t = Tracker()
+    t.emit_many(_serve_events(3))
+    t.to_jsonl(p, header=RunMeta(log_type="serve"))
+    assert summarize(str(p), strict=True) == 0
+    out = capsys.readouterr().out
+    assert "serve_step   n=3" in out and "4 events, 0 invalid rows" in out
+
+    with open(p, "a") as f:
+        f.write('{"kind": "nope"}\n')
+    assert summarize(str(p), strict=False) == 0
+    assert summarize(str(p), strict=True) == 1
