@@ -75,6 +75,14 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         rows.append(("serve/engine/ERROR", 0.0, f"{type(e).__name__}:{e}"))
 
+    # prefix-affinity router over a 2-replica fleet vs one engine
+    try:
+        from benchmarks.router import bench_router
+
+        rows.extend(bench_router())
+    except Exception as e:  # noqa: BLE001
+        rows.append(("serve/router/ERROR", 0.0, f"{type(e).__name__}:{e}"))
+
     try:
         from benchmarks.fleet import bench_fleet
 

@@ -111,6 +111,38 @@ class Rules:
                    params=concretize(_PARAM_TABLE),
                    acts=concretize(_ACT_TABLE))
 
+    @classmethod
+    def for_serving(cls, mesh) -> "Rules":
+        """Placement policy for the serve data plane (DESIGN.md §13).
+
+        Pure tensor parallelism: wide parameter and activation feature dims
+        shard over "model" exactly as in training, while every batch-like
+        axis is replicated —
+
+        * ``batch`` (the decode-slot axis): each device computes all slots;
+          the fixed-shape decode batch is small at serving operating points
+          and TP wants the full activation row per device anyway;
+        * ``cache_batch``: in the *paged* cache this axis is the physical
+          page pool (see serve/cache.py) — any slot may reference any page
+          through its page table, so the pool must be resident everywhere
+          (pages shard over "model" along their head/latent feature dims
+          instead);
+        * ``embed`` (FSDP in training): replicated — serving wants full
+          parameter rows resident instead of paying an all-gather every
+          decode step for a batch of a few slots.
+
+        Note on exactness: at world size 1 this placement is trivially
+        bitwise-identical to the unsharded engine.  At world size > 1 the
+        model-axis contractions (attention output / MLP down projections)
+        reduce across devices, so logits agree to float tolerance and the
+        greedy token streams — not the raw logits — are the bit-identity
+        surface (tests/test_serve_sharding.py).
+        """
+        return cls.default(mesh).override(
+            params={"embed": None},
+            acts={"batch": None, "cache_batch": None},
+        )
+
     def override(self, params: Optional[Mapping[str, Any]] = None,
                  acts: Optional[Mapping[str, Any]] = None) -> "Rules":
         """New Rules with some logical-axis entries replaced."""

@@ -304,7 +304,26 @@ class ServeDeployment:
     def slo_met(self) -> bool:
         return self.p95_latency() <= self.slo_p95_s
 
+    def observe_router(self, events) -> int:
+        """Feed a routed deployment's telemetry (RouterEvent + replica-
+        tagged serve_step rows) into this deployment's planner: affinity-hit
+        rate and measured per-replica throughput then show up in snapshots
+        and in ``measured_effective_m``."""
+        return self.planner.ingest(events)
+
+    def measured_effective_m(self) -> float:
+        """Measured effective replica count from router telemetry (affinity-
+        cold replicas count fractionally); falls back to the provisioned
+        count when no routed run has been observed."""
+        m = self.planner.measured_effective_replicas()
+        return m if m > 0 else float(self.replicas)
+
     def snapshot(self, qps: float, lat_s: float) -> Dict[str, Any]:
-        return {"m": self.replicas, "qps": round(qps, 6),
+        snap = {"m": self.replicas, "qps": round(qps, 6),
                 "lat_s": round(lat_s, 9),
                 "ok": bool(lat_s <= self.slo_p95_s)}
+        # only present after router telemetry was observed, so golden-trace
+        # fixtures recorded without a router replay byte-identically
+        if self.planner.router_dispatches:
+            snap["affinity"] = round(self.planner.affinity_hit_rate, 6)
+        return snap

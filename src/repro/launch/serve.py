@@ -11,6 +11,17 @@ prompt heads, checks prefix-reuse logits against a cold prefill bit-for-bit,
 and prints the fitted f(b) step model plus a capacity plan (what replica
 count m and max-batch hit a p50 target at a given QPS).
 
+Multi-replica routed serving (DESIGN.md §13):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --continuous --router --replicas 2
+
+replays the same trace through a prefix-affinity router over N replicas
+(``--replicas 0`` asks the fitted capacity planner for its min-replicas
+answer) and asserts every request's token stream is bit-identical to the
+single-engine reference.  ``--tp K`` additionally runs each replica
+tensor-parallel over K forced-host devices.
+
 Static batch (the original demo, now also served by the engine):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
@@ -18,30 +29,44 @@ Static batch (the original demo, now also served by the engine):
 """
 from __future__ import annotations
 
-import argparse
+import os
 import sys
-from typing import Dict, Optional
+
+# --tp K forces K host devices; jax locks the device count at first
+# initialization, so this must run before ANY jax-importing import below
+# (same contract as launch/dryrun.py).
+if "--tp" in sys.argv[1:]:
+    _k = int(sys.argv[sys.argv.index("--tp") + 1])
+    if _k > 1 and "xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_k}").strip()
+
+import argparse
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve import CapacityPlanner, ServeEngine
+from repro.serve import CapacityPlanner, Router, ServeEngine
 
 
 class Server:
     """Batch-synchronous facade kept for tests/back-compat; every request is
-    admitted at step 0 and decoded by the continuous engine."""
+    admitted at step 0 and decoded by the continuous engine.  Passing a mesh
+    (and optionally Rules) runs the sharded data plane (serve/sharding.py)."""
 
     def __init__(self, arch: str, smoke: bool = True, max_seq: int = 128,
                  mesh=None, rules=None, seed: int = 0, page_size: int = 16):
-        if mesh is not None or rules is not None:
-            raise NotImplementedError(
-                "sharded serving is not supported by the paged engine yet; "
-                "pass mesh=None, rules=None")
         self.arch = arch
         self.smoke = smoke
         self.max_seq = max_seq
         self.seed = seed
         self.page_size = page_size
+        self.rt = None
+        if mesh is not None or rules is not None:
+            self.rt = _serving_runtime(page_size, "stream", mesh=mesh,
+                                       rules=rules)
         self._engine: Optional[ServeEngine] = None
         self.cfg = ServeEngine.config_for(arch, smoke)
 
@@ -50,7 +75,7 @@ class Server:
             self._engine = ServeEngine(
                 self.arch, smoke=self.smoke, max_batch=batch,
                 page_size=self.page_size, max_seq=self.max_seq,
-                seed=self.seed)
+                seed=self.seed, rt=self.rt)
         return self._engine
 
     def generate(self, prompts: np.ndarray, gen_tokens: int,
@@ -81,29 +106,53 @@ class Server:
         }
 
 
-def _mixed_trace(eng: ServeEngine, n_requests: int, seed: int):
-    """Mixed prompt lengths, bursty arrivals, one shared prompt head."""
+def _serving_runtime(page_size: int, paged_impl: str, *, mesh=None,
+                     rules=None):
+    """Serving Runtime with the engine's pinned kernel geometry (see
+    ServeEngine.__init__ on why block_q = block_k = 16)."""
+    from repro.models.runtime import Runtime
+
+    return Runtime(remat="none", block_q=16, block_k=16, scan_chunk=32,
+                   page_size=page_size, paged_impl=paged_impl, mesh=mesh,
+                   rules=rules)
+
+
+# One trace request: (prompt, gen_tokens, arrival_step, frontend_embeds).
+TraceSpec = Tuple[np.ndarray, int, int, Optional[np.ndarray]]
+
+
+def _mixed_trace_specs(cfg, page_size: int, n_requests: int,
+                       seed: int) -> List[TraceSpec]:
+    """Mixed prompt lengths, bursty arrivals, one shared prompt head —
+    generated independently of any engine so the same trace can be replayed
+    through a single engine and a routed fleet.  The RNG draw order is
+    load-bearing: it pins the traces existing goldens/smoke output use."""
     rng = np.random.RandomState(seed)
-    ps = eng.page_size
-    shared_head = rng.randint(0, eng.cfg.vocab_size, 2 * ps).astype(np.int32)
-    reqs = []
+    ps = page_size
+    shared_head = rng.randint(0, cfg.vocab_size, 2 * ps).astype(np.int32)
+    specs: List[TraceSpec] = []
     for i in range(n_requests):
         if i % 3 == 0:  # every third request shares the prompt head
-            tail = rng.randint(0, eng.cfg.vocab_size,
+            tail = rng.randint(0, cfg.vocab_size,
                                3 + rng.randint(0, ps)).astype(np.int32)
             prompt = np.concatenate([shared_head, tail])
         else:
             plen = int(rng.choice([7, 12, 21, 30]))
-            prompt = rng.randint(0, eng.cfg.vocab_size, plen).astype(np.int32)
+            prompt = rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
         gen = int(rng.choice([4, 6, 8]))
         arrival = (i // 2) * 2  # bursty: pairs arrive together
         fe = None
-        if eng.cfg.n_frontend_tokens:
-            fe = (rng.randn(eng.cfg.n_frontend_tokens, eng.cfg.d_model)
+        if cfg.n_frontend_tokens:
+            fe = (rng.randn(cfg.n_frontend_tokens, cfg.d_model)
                   * 0.02).astype(np.float32)
-        reqs.append(eng.submit(prompt, gen, arrival_step=arrival,
-                               frontend_embeds=fe))
-    return reqs
+        specs.append((prompt, gen, arrival, fe))
+    return specs
+
+
+def _mixed_trace(eng: ServeEngine, n_requests: int, seed: int):
+    specs = _mixed_trace_specs(eng.cfg, eng.page_size, n_requests, seed)
+    return [eng.submit(prompt, gen, arrival_step=arrival, frontend_embeds=fe)
+            for prompt, gen, arrival, fe in specs]
 
 
 def _verify_prefix_reuse(arch: str, smoke: bool, eng: ServeEngine,
@@ -154,6 +203,72 @@ def _resolve_prefill_chunk(value: Optional[int], smoke: bool) -> Optional[int]:
     return chunk
 
 
+def _run_router(args, specs: List[TraceSpec], reference, n_replicas: int,
+                prefill_chunk: Optional[int]) -> None:
+    """Replay the reference trace through a prefix-affinity router over
+    ``n_replicas`` engines and assert bit-identical per-request outputs."""
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(1, args.tp)
+        print(f"tensor parallel: {args.tp}-way over mesh "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    rt = _serving_runtime(args.page_size, args.paged_impl, mesh=mesh)
+
+    def make_engine(i: int) -> ServeEngine:
+        return ServeEngine(
+            args.arch, smoke=args.smoke, max_batch=args.max_batch,
+            page_size=args.page_size, max_seq=64 + args.page_size * 2,
+            seed=args.seed, rt=rt, prefill_chunk=prefill_chunk,
+            speculate=args.speculate, replica_id=i)
+
+    if mesh is not None:
+        # bit-identity is a same-placement guarantee: TP psums reduce in a
+        # different order than the unsharded engine, so at K > 1 the routed
+        # fleet is compared against a single engine on the SAME mesh (the
+        # unsharded reference agrees to float tolerance, not bitwise)
+        ref = make_engine(-1)
+        for prompt, gen, arrival, fe in specs:
+            ref.submit(prompt, gen, arrival_step=arrival, frontend_embeds=fe)
+        ref.run()
+        reference = ref.scheduler.finished
+        reference.sort(key=lambda r: r.rid)
+
+    engines = [make_engine(i) for i in range(n_replicas)]
+    router = Router(engines, spill_slack=args.spill_slack)
+    routed = [router.submit(prompt, gen, arrival_step=arrival,
+                            frontend_embeds=fe)
+              for prompt, gen, arrival, fe in specs]
+    rstats = router.run()
+    print(f"router: {rstats['dispatched']} requests over "
+          f"{n_replicas} replicas {rstats['dispatch_per_replica']}, "
+          f"affinity hit rate {rstats['affinity_hit_rate']:.2f} "
+          f"({rstats['affinity_hits']} hits, {rstats['spills']} spills)")
+
+    identical = all(rr.generated == ref.generated
+                    for rr, ref in zip(routed, reference))
+    print(f"routed fleet vs single engine: "
+          f"bit_identical={'yes' if identical else 'NO'}")
+
+    planner = CapacityPlanner()
+    planner.ingest(router.all_events())
+    per = planner.replica_stats()
+    for idx, s in per.items():
+        print(f"  replica {idx}: {int(s['dispatches'])} dispatched, "
+              f"{int(s['affinity_hits'])} affinity hits, "
+              f"{int(s['decode_tokens'])} tokens @ {s['tok_per_s']:.1f} tok/s")
+    print(f"measured effective replicas: "
+          f"{planner.measured_effective_replicas():.2f}/{n_replicas}")
+
+    if args.router_log:
+        n = router.to_jsonl(args.router_log)
+        print(f"router log: {n} events -> {args.router_log}")
+    if not identical:
+        print("FAIL: routed outputs diverge from the single-engine reference")
+        sys.exit(1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
@@ -190,7 +305,26 @@ def main():
                     help="seed the capacity planner with measured "
                          "paged-decode kernel timings from this autotuner "
                          "config cache before fitting")
+    ap.add_argument("--router", action="store_true",
+                    help="replay the trace through a prefix-affinity router "
+                         "over N replicas and assert bit-identical outputs "
+                         "(implies --continuous)")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="replica count for --router (0 = the fitted "
+                         "capacity planner's min-replicas answer)")
+    ap.add_argument("--spill-slack", type=int, default=512, metavar="TOKENS",
+                    help="router overflow spill: an affinity winner more "
+                         "than this many pending tokens above the fleet "
+                         "minimum forfeits the request")
+    ap.add_argument("--router-log", default=None, metavar="PATH",
+                    help="dump the combined router + replica event stream "
+                         "as JSONL")
+    ap.add_argument("--tp", type=int, default=1, metavar="K",
+                    help="tensor-parallel world size per replica (forces K "
+                         "host devices; must be first jax initialization)")
     args = ap.parse_args()
+    if args.router:
+        args.continuous = True
 
     if not args.continuous:
         server = Server(args.arch, smoke=args.smoke,
@@ -215,7 +349,10 @@ def main():
                       max_seq=64 + args.page_size * 2, seed=args.seed,
                       paged_impl=args.paged_impl,
                       prefill_chunk=prefill_chunk, speculate=args.speculate)
-    reqs = _mixed_trace(eng, args.requests, args.seed)
+    specs = _mixed_trace_specs(eng.cfg, eng.page_size, args.requests,
+                               args.seed)
+    reqs = [eng.submit(prompt, gen, arrival_step=arrival, frontend_embeds=fe)
+            for prompt, gen, arrival, fe in specs]
     stats = eng.run()
     done = [r for r in reqs if r.finished_step >= 0]
     print(f"served {len(done)}/{len(reqs)} requests in {eng.step_count} steps "
@@ -263,6 +400,7 @@ def main():
         print(f"capacity plan: seeded with {n} measured kernel row(s) "
               f"from {args.tune_cache} (x{n_layers} layers)")
     planner.ingest(eng.events("serve_step"))
+    plan = None
     try:
         planner.fit()
     except ValueError as e:
@@ -280,6 +418,14 @@ def main():
         else:
             print(f"capacity plan: no feasible operating point "
                   f"({plan.reason})")
+
+    if args.router:
+        n_replicas = args.replicas
+        if n_replicas <= 0:
+            n_replicas = plan.m if plan else 2
+            print(f"router: --replicas 0 -> planner min-replicas answer "
+                  f"m={n_replicas}")
+        _run_router(args, specs, reqs, n_replicas, prefill_chunk)
 
     ok = _verify_prefix_reuse(args.arch, args.smoke, eng, args.seed)
     if not ok:

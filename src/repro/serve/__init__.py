@@ -1,12 +1,15 @@
 """Continuous-batching serving subsystem (paged KV cache + Hemingway
-capacity planning).  See DESIGN.md §7."""
+capacity planning).  See DESIGN.md §7 and §13 (sharded data plane +
+prefix-affinity router)."""
 
 from repro.serve.cache import init_paged_cache, write_prefill
 from repro.serve.engine import ServeEngine
 from repro.serve.paging import SCRATCH_PAGE, OutOfPages, PagePool
 from repro.serve.planner import CapacityPlanner
 from repro.serve.prefix import PrefixCache
+from repro.serve.router import RoutedRequest, Router
 from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.sharding import ShardingPlan
 
 __all__ = [
     "CapacityPlanner",
@@ -15,9 +18,12 @@ __all__ = [
     "PrefixCache",
     "Request",
     "RequestState",
+    "RoutedRequest",
+    "Router",
     "SCRATCH_PAGE",
     "Scheduler",
     "ServeEngine",
+    "ShardingPlan",
     "init_paged_cache",
     "write_prefill",
 ]

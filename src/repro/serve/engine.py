@@ -57,6 +57,7 @@ from repro.serve.cache import (
 from repro.serve.paging import SCRATCH_PAGE, PagePool
 from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.sharding import ShardingPlan
 from repro.serve.speculate import NgramProposer
 from repro.telemetry import (
     Event,
@@ -85,6 +86,7 @@ class ServeEngine:
         prefill_chunk: Optional[int] = None,
         speculate: int = 0,
         draft_ngram: int = 3,
+        replica_id: int = -1,
     ):
         self.cfg = self.config_for(arch, smoke)
         if speculate < 0:
@@ -173,8 +175,23 @@ class ServeEngine:
         self._chunk = jax.jit(
             self.lm.prefill_chunk, static_argnames=("s0",), donate_argnums=(3,)
         )
+        # sharded data plane (DESIGN.md §13): when the Runtime carries a
+        # mesh, place params and the paged cache per the serving Rules and
+        # replace the decode/chunk jits with explicitly-sharded ones.  The
+        # host-side step loop is untouched — tokens/lengths/page tables are
+        # replicated, and the eager cache writers (write_prefill,
+        # restore_state) hand arrays back to the jit, whose in_shardings
+        # re-pin them.
+        self.plan = ShardingPlan.for_runtime(self.rt)
+        if self.plan is not None:
+            self.params = self.plan.shard_params(self.params, self.lm.param_axes())
+            self.cache = self.plan.shard_cache(self.cache, self.axes)
+            self.page_tables_dev = self.plan.put_replicated(self.page_tables_dev)
+            self._decode = self.plan.decode_jit(self.lm, self.params, self.cache)
+            self._chunk = self.plan.prefill_chunk_jit(self.lm, self.params, self.cache)
         self.step_count = 0
         self._rid = 0
+        self.replica_id = replica_id
         # every step timing rides the telemetry bus as a ServeStepEvent;
         # the deprecated ``telemetry`` property reconstructs legacy rows
         self.tracker = Tracker([MemorySink()])
@@ -525,6 +542,7 @@ class ServeEngine:
                 drafted=drafted,
                 prefill_tokens=prefill_tokens,
                 t_s=self._t_s,
+                replica=self.replica_id,
             )
         )
 

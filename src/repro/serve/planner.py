@@ -65,6 +65,26 @@ class CapacityPlanner:
         # chunked-prefill throughput (tokens/s across chunk calls)
         self._prefill_tokens = 0.0
         self._prefill_s = 0.0
+        # per-replica accounting from a routed (multi-engine) deployment:
+        # replica index -> accumulators.  Populated by replica-tagged
+        # serve_step rows (replica >= 0) and router dispatch events.
+        self._replica: Dict[int, Dict[str, float]] = {}
+        self._router_dispatches = 0
+        self._router_hits = 0
+        self._router_routable = 0
+        self._router_spills = 0
+
+    def _replica_acc(self, idx: int) -> Dict[str, float]:
+        return self._replica.setdefault(
+            idx,
+            {
+                "decode_tokens": 0.0,
+                "busy_s": 0.0,
+                "dispatches": 0.0,
+                "affinity_hits": 0.0,
+                "spills": 0.0,
+            },
+        )
 
     # ------------------------------------------------------------------
     def observe(self, batch: int, step_s: float) -> None:
@@ -79,6 +99,12 @@ class CapacityPlanner:
         * ``tune`` — autotuner results for the paged decode kernel seed the
           step model from measured kernel timings: one decode step is
           approximated as ``n_layers * kernel + overhead_s``.
+        * ``router`` — dispatch decisions from a multi-replica router feed
+          the affinity-hit rate and per-replica dispatch counts; combined
+          with replica-tagged ``serve_step`` rows (``replica >= 0``) the
+          planner measures each replica's *effective* throughput — a
+          replica that mostly serves cold prompts decodes fewer tokens per
+          busy second than an affinity-hot one.
 
         Other kinds are ignored, so an entire run log can be replayed in.
         Returns the number of events that contributed observations."""
@@ -86,6 +112,7 @@ class CapacityPlanner:
         for ev in events:
             kind = getattr(ev, "kind", None)
             if kind == "serve_step":
+                replica = int(getattr(ev, "replica", -1))
                 if ev.op == "prefill":
                     self._prefill_tokens += float(ev.prefill_tokens)
                     self._prefill_s += float(ev.step_s)
@@ -94,7 +121,24 @@ class CapacityPlanner:
                     self.observe(ev.batch, ev.step_s)
                     self._committed_tokens += float(ev.committed)
                     self._slot_steps += float(ev.batch)
+                    if replica >= 0:
+                        acc = self._replica_acc(replica)
+                        acc["decode_tokens"] += float(ev.committed)
+                        acc["busy_s"] += float(ev.step_s)
                     n += 1
+            elif kind == "router":
+                acc = self._replica_acc(int(ev.replica))
+                acc["dispatches"] += 1
+                self._router_dispatches += 1
+                if ev.prompt_pages > 0:
+                    self._router_routable += 1
+                if ev.matched_pages > 0:
+                    acc["affinity_hits"] += 1
+                    self._router_hits += 1
+                if ev.reason == "spill":
+                    acc["spills"] += 1
+                    self._router_spills += 1
+                n += 1
             elif kind == "tune":
                 if ev.family == "flash_decode_paged" and ev.shape.get("b", 0) > 0:
                     step_s = n_layers * ev.us_per_call * 1e-6 + overhead_s
@@ -125,6 +169,46 @@ class CapacityPlanner:
         if not self._prefill_s:
             return 0.0
         return self._prefill_tokens / self._prefill_s
+
+    # ------------------------------------------------------------------
+    # multi-replica (router) accounting
+    # ------------------------------------------------------------------
+    @property
+    def router_dispatches(self) -> int:
+        """Router dispatch decisions ingested so far (0 = no router ran)."""
+        return self._router_dispatches
+
+    @property
+    def affinity_hit_rate(self) -> float:
+        """Fraction of *routable* dispatches (>= 1 full prompt page) that
+        landed on a replica already holding cached prefix pages."""
+        if not self._router_routable:
+            return 0.0
+        return self._router_hits / self._router_routable
+
+    def replica_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-replica measured accounting: dispatches, affinity hits,
+        spills, decode tokens, busy seconds, and tokens/busy-second."""
+        out: Dict[int, Dict[str, float]] = {}
+        for idx in sorted(self._replica):
+            acc = dict(self._replica[idx])
+            busy = acc["busy_s"]
+            acc["tok_per_s"] = acc["decode_tokens"] / busy if busy else 0.0
+            out[idx] = acc
+        return out
+
+    def measured_effective_replicas(self) -> float:
+        """Effective replica count from measured per-replica throughput:
+        each replica contributes its tokens/busy-second relative to the
+        fastest one, so a fleet whose replicas all run affinity-hot counts
+        ~N while a skewed fleet counts fewer.  The measured analogue of the
+        fractional ``m`` accepted by :meth:`tokens_per_s`; 0.0 until
+        replica-tagged rows have been ingested."""
+        rates = [s["tok_per_s"] for s in self.replica_stats().values()]
+        peak = max(rates, default=0.0)
+        if peak <= 0.0:
+            return 0.0
+        return sum(r / peak for r in rates)
 
     def observe_tuned_kernels(
         self, rows: Sequence[Dict], *, n_layers: int = 1, overhead_s: float = 0.0

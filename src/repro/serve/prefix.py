@@ -21,6 +21,15 @@ The cache holds one pool reference per registered page; ``release_lru``
 drops the oldest chains when the pool runs dry, and ``clear`` drops
 everything (after which a drained pool must report zero pages in use — the
 leak invariant ``tests/test_serve.py`` checks).
+
+Eviction-order invariant (DESIGN.md §13): the registered chain keys always
+form a *prefix-closed* set — every key's parent (the chain one page shorter)
+is registered too.  ``match()`` walks from page 0 and breaks at the first
+missing key, so dropping a mid-chain page would make every descendant
+unreachable while its entry kept pinning a pool reference (a strand).
+``release_lru`` therefore evicts suffix-first: only chain *leaves* (keys with
+no registered children) are ever dropped, oldest leaf first, which unwinds
+the LRU chain from its tail without ever stranding a descendant.
 """
 
 from __future__ import annotations
@@ -28,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +61,12 @@ class PrefixCache:
         self.page_size = page_size
         # chain-hash -> physical page id, in LRU order (oldest first)
         self._pages: "OrderedDict[str, int]" = OrderedDict()
+        # chain linkage: key -> parent key (None for page-0 keys) and the
+        # number of registered children.  Eviction only ever drops keys with
+        # zero children (chain leaves), so the key set stays prefix-closed
+        # and no registered page can become unreachable via ``match``.
+        self._parent: Dict[str, Optional[str]] = {}
+        self._nchildren: Dict[str, int] = {}
         self._full: "OrderedDict[str, FullPromptEntry]" = OrderedDict()
         # counters are maintained by the scheduler on *successful* admission
         # only, so a request blocked on pages and retried every step does not
@@ -80,19 +95,40 @@ class PrefixCache:
             pool.share(matched)
         return matched
 
+    def peek(self, prompt: np.ndarray) -> int:
+        """Number of leading full pages of ``prompt`` the cache could share,
+        with no side effects: no references taken and no LRU bumps.  Routers
+        probe every replica with this — only the replica that actually
+        receives the request should perturb its cache state."""
+        ps = self.page_size
+        n = 0
+        for j in range(len(prompt) // ps):
+            if _chain_key(prompt[: (j + 1) * ps]) not in self._pages:
+                break
+            n += 1
+        return n
+
     def register(
         self, prompt: np.ndarray, page_ids: Sequence[int], pool: PagePool
     ) -> None:
         """Publish ``prompt``'s full pages (already written) for future
         sharing.  The cache takes its own reference on each new page."""
         ps = self.page_size
+        prev: Optional[str] = None
         for j in range(len(prompt) // ps):
             key = _chain_key(prompt[: (j + 1) * ps])
             if key in self._pages:
                 self._pages.move_to_end(key)
-                continue
-            pool.share([page_ids[j]])
-            self._pages[key] = page_ids[j]
+            else:
+                pool.share([page_ids[j]])
+                self._pages[key] = page_ids[j]
+                # j > 0 keys always have a registered parent: this loop just
+                # inserted (or bumped) the one-page-shorter chain
+                self._parent[key] = prev
+                self._nchildren[key] = 0
+                if prev is not None:
+                    self._nchildren[prev] += 1
+            prev = key
 
     # ------------------------------------------------------------------
     def match_full(
@@ -152,25 +188,45 @@ class PrefixCache:
 
         # a drafting slot streams down one source prompt, re-matching it
         # every step — try the entry that produced the previous draft before
-        # scanning the whole registry
+        # scanning the whole registry.  Every served draft MRU-bumps its
+        # source entry: an actively-drafting source that sat at the LRU end
+        # would otherwise be evicted mid-stream under pool pressure,
+        # silently killing the speculative accept rate.
         hit = self._draft_hit
         if hit is not None and hit in self._full:
             d = scan(self._full[hit])
             if d is not None:
+                self._full.move_to_end(hit)
                 return d
-        for key in reversed(self._full):
+        for key in reversed(list(self._full)):
             if key == hit:
                 continue
             d = scan(self._full[key])
             if d is not None:
                 self._draft_hit = key
+                self._full.move_to_end(key)
                 return d
         return None
 
     # ------------------------------------------------------------------
+    def _drop_key(self, key: str, pool: PagePool) -> None:
+        pid = self._pages.pop(key)
+        parent = self._parent.pop(key, None)
+        self._nchildren.pop(key, None)
+        if parent is not None and parent in self._nchildren:
+            self._nchildren[parent] -= 1
+        pool.free([pid])
+
     def release_lru(self, pool: PagePool, min_free: int) -> int:
         """Drop oldest entries until ``pool.free_pages >= min_free`` (or the
-        cache is empty).  Returns the number of references released."""
+        cache is empty).  Returns the number of references released.
+
+        Chain pages are evicted suffix-first: only *leaves* (keys with no
+        registered children) are candidates, oldest leaf first.  Evicting a
+        mid-chain page would strand every descendant — ``match`` breaks at
+        the first missing key, so stranded entries could never be shared
+        again yet would keep pinning pool references (see module docstring).
+        """
         released = 0
         while pool.free_pages < min_free and (self._pages or self._full):
             if self._full:
@@ -178,8 +234,8 @@ class PrefixCache:
                 pool.free(entry.page_ids)
                 released += len(entry.page_ids)
             else:
-                _, pid = self._pages.popitem(last=False)
-                pool.free([pid])
+                key = next(k for k in self._pages if self._nchildren.get(k, 0) == 0)
+                self._drop_key(key, pool)
                 released += 1
         return released
 
@@ -187,6 +243,8 @@ class PrefixCache:
         for pid in self._pages.values():
             pool.free([pid])
         self._pages.clear()
+        self._parent.clear()
+        self._nchildren.clear()
         for entry in self._full.values():
             pool.free(entry.page_ids)
         self._full.clear()

@@ -140,6 +140,23 @@ class Scheduler:
     def drained(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)
 
+    @property
+    def pending_tokens(self) -> int:
+        """Outstanding work in cache positions: unprefilled prompt tokens
+        plus remaining generation, summed over queued and active requests.
+        The router's load signal — comparable across replicas because it is
+        denominated in decode-step work, not request counts."""
+        total = 0
+        for req in self.queue:
+            total += self.total_tokens(req)
+        for req in self.slots:
+            if req is None:
+                continue
+            if req.state is RequestState.PREFILLING:
+                total += len(req.prompt) - req.prefill_pos
+            total += req.max_new_tokens - len(req.generated)
+        return total
+
     def total_tokens(self, req: Request) -> int:
         """Cache positions this request may occupy over its lifetime.
         Frontend tokens occupy positions only when embeddings are supplied."""

@@ -23,6 +23,7 @@ from .events import (
     Event,
     FleetTickEvent,
     RefitEvent,
+    RouterEvent,
     RunMeta,
     SchemaError,
     ServeStepEvent,
@@ -70,6 +71,7 @@ __all__ = [
     "JSONLSink",
     "MemorySink",
     "RefitEvent",
+    "RouterEvent",
     "RunMeta",
     "SchemaError",
     "ServeStepEvent",

@@ -173,6 +173,11 @@ class ServeStepEvent(Event):
     drafted: int = 0
     prefill_tokens: int = 0
     t_s: float = 0.0
+    # emitting replica in a multi-engine (routed) deployment; -1 for a
+    # standalone engine.  Additive field with a default: older rows parse
+    # unchanged, and ``to_legacy`` never emits it (the pre-bus row shape
+    # predates multi-replica serving).
+    replica: int = -1
 
     @classmethod
     def from_legacy_row(cls, row: dict) -> "ServeStepEvent":
@@ -208,6 +213,33 @@ class ServeStepEvent(Event):
         if self.op == "verify":
             row["drafted"] = self.drafted
         return row
+
+
+# ---------------------------------------------------------------------------
+# router dispatch decisions (multi-replica serving; no legacy shape)
+# ---------------------------------------------------------------------------
+
+
+@register
+@dataclass(frozen=True)
+class RouterEvent(Event):
+    """One routing decision: which replica got a request and why.
+
+    ``reason`` is the dispatch rule that fired: ``"affinity"`` (longest
+    cached-prefix owner won), ``"load"`` (no replica had cached pages;
+    least-loaded won), or ``"spill"`` (the affinity winner was overloaded
+    and the request overflowed to the least-loaded replica)."""
+
+    kind: ClassVar[str] = "router"
+
+    step: int  # arrival step of the dispatched request
+    rid: int  # router-global request id
+    replica: int  # chosen replica index
+    matched_pages: int  # cached full prefix pages on the chosen replica
+    best_affinity: int  # best cached-prefix match across ALL replicas
+    reason: str  # "affinity" | "load" | "spill"
+    prompt_pages: int = 0  # full pages in the request's prompt
+    loads: List[int] = field(default_factory=list)  # pending tokens/replica
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,183 @@
+"""PrefixCache eviction-order and draft-MRU invariants (DESIGN.md §13).
+
+Two regressions pinned here:
+
+* ``release_lru`` used to evict chain pages one-at-a-time in raw LRU order,
+  which could drop a chain's *head* while descendants stayed registered —
+  ``match`` breaks at the first missing key, so the descendants became
+  unreachable forever while still pinning pool references (a strand).
+  Eviction must be suffix-first: only chain leaves are dropped.
+* ``draft`` used to skip the MRU bump on its ``_draft_hit`` fast path, so a
+  prompt actively serving speculative drafts could sit at the LRU end and be
+  evicted mid-stream under pool pressure.
+
+The property test runs random register/match/evict/clear schedules against
+a shadow reachability + refcount model (same style as the PagePool schedule
+test in tests/test_serve.py): after ANY schedule, every cached chain key
+must be reachable via ``match``/``peek`` and the pool's in-use count must
+equal exactly the references the cache plus outstanding matches hold."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import PagePool, PrefixCache
+
+PS = 4  # page size for all tests here
+
+
+def _prompt(base: int, n_tokens: int) -> np.ndarray:
+    """Deterministic prompt in a per-``base`` disjoint token range, so
+    different prompts never share chain keys or pages."""
+    return np.arange(n_tokens, dtype=np.int32) + base * 10_000
+
+
+def _register(pc: PrefixCache, pool: PagePool, prompt: np.ndarray):
+    """Allocate pages, register the prompt's chains, then drop our refs —
+    afterwards only the cache's own references pin the pages."""
+    n_pages = -(-len(prompt) // PS)
+    pages = pool.alloc(n_pages)
+    pc.register(prompt, pages, pool)
+    pool.free(pages)
+
+
+def _cache_refs(pc: PrefixCache) -> int:
+    return len(pc._pages) + sum(len(e.page_ids) for e in pc._full.values())
+
+
+# ------------------------------------------------------------- strand bugfix
+def test_release_lru_never_strands_descendants():
+    """Force eviction with a long chain at the LRU end: raw-LRU eviction
+    would drop the chain's page-0 key first, stranding pages 1..3; suffix-
+    first eviction must unwind from the leaf instead."""
+    pool = PagePool(num_pages=8, page_size=PS)  # 7 allocatable
+    pc = PrefixCache(PS)
+    long_prompt = _prompt(1, 4 * PS)  # 4-page chain, registered first (LRU)
+    short_prompt = _prompt(2, PS)  # 1-page chain, registered second (MRU)
+    _register(pc, pool, long_prompt)
+    _register(pc, pool, short_prompt)
+    assert pool.free_pages == 2 and len(pc._pages) == 5
+
+    released = pc.release_lru(pool, min_free=3)
+    assert released == 1 and pool.free_pages == 3
+    # the long chain lost exactly its LEAF: 3 pages still reachable in order
+    assert pc.peek(long_prompt) == 3
+    assert pc.peek(short_prompt) == 1
+    # nothing is stranded: every remaining key is reachable via match
+    assert pc.peek(long_prompt) + pc.peek(short_prompt) == len(pc._pages)
+
+    # deeper pressure keeps unwinding the old chain suffix-first
+    pc.release_lru(pool, min_free=5)
+    assert pc.peek(long_prompt) == 1
+    assert pc.peek(long_prompt) + pc.peek(short_prompt) == len(pc._pages)
+
+    pc.clear(pool)
+    assert pool.pages_in_use == 0
+
+
+def test_release_lru_frees_only_unreferenced_refcounts():
+    """A stranded page is unreachable BUT still referenced — the original
+    bug's leak signature.  After eviction under any min_free, the pool's
+    in-use count must equal the cache's reachable-key count exactly."""
+    pool = PagePool(num_pages=12, page_size=PS)
+    pc = PrefixCache(PS)
+    prompts = [_prompt(i + 1, (i % 3 + 1) * PS) for i in range(4)]
+    for p in prompts:
+        _register(pc, pool, p)
+    for min_free in (3, 5, 8):
+        pc.release_lru(pool, min_free=min_free)
+        reachable = sum(pc.peek(p) for p in prompts)
+        assert reachable == len(pc._pages)
+        assert pool.pages_in_use == _cache_refs(pc)
+    pc.clear(pool)
+    assert pool.pages_in_use == 0
+
+
+# ------------------------------------------------------------ draft-MRU bugfix
+def test_draft_fast_path_bumps_source_entry():
+    """An entry serving drafts through the ``_draft_hit`` fast path must be
+    MRU-bumped on every served draft, so eviction pressure takes idle
+    entries first and never kills an active draft source mid-stream."""
+    pool = PagePool(num_pages=16, page_size=PS)
+    pc = PrefixCache(PS)
+
+    def register_full(base: int, tokens: np.ndarray):
+        pages = pool.alloc(len(tokens) // PS)
+        pc.register_full(tokens, pages, np.zeros(8, np.float32), None, pool)
+        pool.free(pages)
+
+    source = np.asarray([5, 6, 7, 8, 9, 10, 11, 12], np.int32)  # 2 pages
+    register_full(1, source)
+    ngram = source[:3]
+    # first draft scans and latches the source as _draft_hit
+    d = pc.draft(ngram, max_draft=4)
+    assert d is not None and list(d) == [8, 9, 10, 11]
+    # two younger idle entries arrive after it
+    register_full(2, _prompt(2, 2 * PS))
+    register_full(3, _prompt(3, 2 * PS))
+    # fast-path draft: must bump the source past both idle entries
+    assert pc.draft(ngram, max_draft=4) is not None
+    assert next(iter(pc._full)) != pc._draft_hit
+
+    # pressure evicts two full entries; the drafting source must survive
+    pc.release_lru(pool, min_free=pool.free_pages + 4)
+    assert len(pc._full) == 1
+    d = pc.draft(ngram, max_draft=4)
+    assert d is not None and list(d) == [8, 9, 10, 11]
+    pc.clear(pool)
+    assert pool.pages_in_use == 0
+
+
+# ----------------------------------------------------------- property schedule
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 24))
+def test_prefix_cache_random_schedule_invariants(seed, num_pages):
+    """Random register/match/register_full/evict/clear schedules vs a shadow
+    reachability + refcount model.  Invariants after every operation:
+
+    * reachability — every cached chain key is reachable by walking some
+      prompt from page 0 (``sum(peek) == len(_pages)``: no strands);
+    * refcount conservation — pool in-use equals cache-held references plus
+      references handed out by ``match``/``match_full`` and not yet freed;
+    * ``match`` agrees with ``peek`` (the router's probe sees exactly what
+      admission would share)."""
+    rng = np.random.RandomState(seed)
+    pool = PagePool(num_pages=num_pages, page_size=PS)
+    pc = PrefixCache(PS)
+    prompts = [_prompt(i + 1, int(rng.randint(1, 5)) * PS) for i in range(5)]
+
+    def assert_invariants():
+        reachable = sum(pc.peek(p) for p in prompts)
+        assert reachable == len(pc._pages), "stranded chain keys"
+        assert pool.pages_in_use == _cache_refs(pc)
+
+    for _ in range(120):
+        op = rng.choice(["register", "register_full", "match", "evict", "clear"])
+        p = prompts[rng.randint(len(prompts))]
+        n_pages = len(p) // PS
+        if op == "register":
+            if pool.free_pages < n_pages:
+                pc.release_lru(pool, min_free=n_pages)
+            if pool.free_pages >= n_pages:
+                _register(pc, pool, p)
+        elif op == "register_full":
+            if pool.free_pages < n_pages:
+                pc.release_lru(pool, min_free=n_pages)
+            if pool.free_pages >= n_pages:
+                pages = pool.alloc(n_pages)
+                pc.register_full(p, pages, np.zeros(4, np.float32), None, pool)
+                pool.free(pages)
+        elif op == "match":
+            expect = pc.peek(p)
+            got = pc.match(p, pool)
+            assert len(got) == expect
+            if got:
+                pool.free(got)  # immediately return the shared refs
+        elif op == "evict":
+            pc.release_lru(pool, min_free=int(rng.randint(1, num_pages)))
+        else:
+            pc.clear(pool)
+            assert pool.pages_in_use == 0
+        assert_invariants()
+
+    pc.clear(pool)
+    assert pool.pages_in_use == 0
+    assert pool.free_pages == num_pages - 1

@@ -1,0 +1,247 @@
+"""Prefix-affinity router: dispatch rules, determinism, bit-identity vs a
+single engine, and CapacityPlanner ingestion of router telemetry.
+
+The bit-identity test is the routed analogue of the engine's batch-
+composition guarantee (see serve/engine.py): dense-arch decode is slot-
+independent, so splitting a trace across N same-seed replicas must produce
+exactly the token streams one engine serving the whole trace produces."""
+import numpy as np
+import pytest
+
+from repro.serve import CapacityPlanner, Router, ServeEngine
+from repro.telemetry import RouterEvent, ServeStepEvent, from_dict
+
+ARCH = "qwen3-14b"  # dense: slot-independent decode
+GEOM = dict(smoke=True, max_batch=2, page_size=8, max_seq=64, seed=0)
+PS = GEOM["page_size"]
+
+
+def _trace(seed: int, n: int, vocab: int):
+    """Mixed trace with a shared head on every even request."""
+    rng = np.random.RandomState(seed)
+    head = rng.randint(0, vocab, 2 * PS).astype(np.int32)
+    specs = []
+    for i in range(n):
+        if i % 2 == 0:
+            prompt = np.concatenate(
+                [head, rng.randint(0, vocab, 3).astype(np.int32)]
+            )
+        else:
+            prompt = rng.randint(0, vocab, 7).astype(np.int32)
+        specs.append((prompt, 4, (i // 2) * 2))
+    return specs
+
+
+def _engines(n: int, **overrides):
+    geom = {**GEOM, **overrides}
+    return [ServeEngine(ARCH, **geom) for _ in range(n)]
+
+
+# ------------------------------------------------------------- bit identity
+def test_routed_fleet_bit_identical_to_single_engine():
+    vocab = ServeEngine.config_for(ARCH, True).vocab_size
+    specs = _trace(0, 6, vocab)
+
+    ref = ServeEngine(ARCH, **GEOM)
+    ref_reqs = [ref.submit(p, g, arrival_step=a) for p, g, a in specs]
+    ref.run()
+
+    router = Router(_engines(2), spill_slack=512)
+    routed = [router.submit(p, g, arrival_step=a) for p, g, a in specs]
+    stats = router.run()
+
+    assert stats["requests_finished"] == len(specs)
+    for rr, ref_req in zip(routed, ref_reqs):
+        assert rr.generated == ref_req.generated
+    # both replicas actually served traffic and affinity fired
+    assert all(c > 0 for c in stats["dispatch_per_replica"])
+    assert stats["affinity_hit_rate"] > 0
+
+
+# ---------------------------------------------------------- dispatch rules
+def test_affinity_routes_to_replica_holding_pages():
+    vocab = ServeEngine.config_for(ARCH, True).vocab_size
+    rng = np.random.RandomState(1)
+    head = rng.randint(0, vocab, 2 * PS).astype(np.int32)
+    other = rng.randint(0, vocab, 7).astype(np.int32)
+
+    router = Router(_engines(2), spill_slack=512)
+    # step 0: cold fleet — first request load-routes to replica 0, second to
+    # replica 1 (load tiebreak); replica 0 then owns the shared head's pages
+    router.submit(head, 3, arrival_step=0)
+    router.submit(other, 3, arrival_step=0)
+    # arrives after replica 0 registered the head's pages at admission
+    target = router.submit(
+        np.concatenate([head, rng.randint(0, vocab, 3).astype(np.int32)]),
+        3,
+        arrival_step=2,
+    )
+    router.run()
+
+    evs = router.events("router")
+    assert [e.reason for e in evs[:2]] == ["load", "load"]
+    assert (evs[0].replica, evs[1].replica) == (0, 1)
+    ev = next(e for e in evs if e.rid == target.rid)
+    assert ev.reason == "affinity"
+    assert ev.replica == 0
+    assert ev.matched_pages == 2 == ev.best_affinity
+
+
+def test_overloaded_affinity_winner_spills():
+    vocab = ServeEngine.config_for(ARCH, True).vocab_size
+    rng = np.random.RandomState(2)
+    head = rng.randint(0, vocab, 2 * PS).astype(np.int32)
+
+    router = Router(_engines(2), spill_slack=0)
+    router.submit(head, 6, arrival_step=0)  # replica 0 owns the head, busy
+    spilled = router.submit(
+        np.concatenate([head, rng.randint(0, vocab, 3).astype(np.int32)]),
+        3,
+        arrival_step=1,  # replica 0 still decoding -> any load gap spills
+    )
+    router.run()
+
+    ev = next(e for e in router.events("router") if e.rid == spilled.rid)
+    assert ev.reason == "spill"
+    assert ev.replica == 1
+    assert ev.best_affinity == 2  # the pages existed, the router chose load
+    assert ev.loads[0] > ev.loads[1]
+
+
+def test_dispatch_deterministic_across_seeds():
+    """Same trace + same fleet shape -> identical dispatch decisions, for
+    several trace seeds (peek and pending_tokens are pure functions of
+    prior dispatches)."""
+    vocab = ServeEngine.config_for(ARCH, True).vocab_size
+    for seed in (0, 3, 7):
+        specs = _trace(seed, 5, vocab)
+        decisions = []
+        for _ in range(2):
+            router = Router(_engines(2), spill_slack=512)
+            for p, g, a in specs:
+                router.submit(p, g, arrival_step=a)
+            router.run()
+            decisions.append(
+                [
+                    (e.rid, e.replica, e.reason, e.matched_pages)
+                    for e in router.events("router")
+                ]
+            )
+        assert decisions[0] == decisions[1]
+
+
+def test_router_rejects_bad_fleets():
+    with pytest.raises(ValueError):
+        Router([])
+    with pytest.raises(ValueError):
+        Router(
+            [
+                ServeEngine(ARCH, **GEOM),
+                ServeEngine(ARCH, **{**GEOM, "page_size": 16}),
+            ]
+        )
+    with pytest.raises(ValueError):
+        Router(_engines(1), spill_slack=-1)
+
+
+# ------------------------------------------------------------- telemetry
+def test_router_event_roundtrip():
+    ev = RouterEvent(
+        step=3,
+        rid=7,
+        replica=1,
+        matched_pages=2,
+        best_affinity=2,
+        reason="affinity",
+        prompt_pages=3,
+        loads=[10, 4],
+    )
+    back = from_dict(ev.to_dict())
+    assert back == ev
+
+
+def test_planner_ingests_router_and_replica_tagged_events():
+    planner = CapacityPlanner()
+    events = [
+        RouterEvent(step=0, rid=0, replica=0, matched_pages=0,
+                    best_affinity=0, reason="load", prompt_pages=2,
+                    loads=[0, 0]),
+        RouterEvent(step=1, rid=1, replica=0, matched_pages=2,
+                    best_affinity=2, reason="affinity", prompt_pages=3,
+                    loads=[8, 0]),
+        RouterEvent(step=1, rid=2, replica=1, matched_pages=0,
+                    best_affinity=2, reason="spill", prompt_pages=2,
+                    loads=[30, 0]),
+        RouterEvent(step=2, rid=3, replica=1, matched_pages=0,
+                    best_affinity=0, reason="load", prompt_pages=0,
+                    loads=[8, 8]),
+        # replica-tagged decode steps: replica 0 decodes 2x faster
+        ServeStepEvent(step=2, step_s=0.1, op="decode", batch=2,
+                       committed=2, replica=0),
+        ServeStepEvent(step=2, step_s=0.2, op="decode", batch=2,
+                       committed=2, replica=1),
+    ]
+    n = planner.ingest(events)
+    assert n == len(events)
+    # rid=3 has no full prompt page -> excluded from the routable base
+    assert planner.affinity_hit_rate == pytest.approx(1 / 3)
+    stats = planner.replica_stats()
+    assert stats[0]["dispatches"] == 2 and stats[0]["affinity_hits"] == 1
+    assert stats[1]["spills"] == 1
+    assert stats[0]["tok_per_s"] == pytest.approx(20.0)
+    assert stats[1]["tok_per_s"] == pytest.approx(10.0)
+    assert planner.measured_effective_replicas() == pytest.approx(1.5)
+
+
+def test_fleet_deployment_snapshot_affinity_is_goldens_safe():
+    """ServeDeployment snapshots gain an ``affinity`` key ONLY after router
+    telemetry is observed — golden fleet traces recorded without a router
+    replay must stay byte-identical."""
+    from repro.fleet.workloads import (
+        RequestTrace,
+        ServeDeployment,
+        serve_capacity_planner,
+    )
+
+    dep = ServeDeployment(
+        name="serve",
+        planner=serve_capacity_planner(dispatch_s=0.02, per_seq_s=0.004),
+        trace=RequestTrace(seed=0, tick_s=300.0, qps=[1.0]),
+        slo_p95_s=4.0, gen_tokens=64, batch_grid=(1, 2, 4),
+        replica_options=(1, 2, 4),
+    )
+    dep.replicas = 2
+    assert "affinity" not in dep.snapshot(1.0, 0.5)
+    assert dep.measured_effective_m() == 2.0
+
+    n = dep.observe_router([
+        RouterEvent(step=0, rid=0, replica=0, matched_pages=2,
+                    best_affinity=2, reason="affinity", prompt_pages=2,
+                    loads=[0, 0]),
+        ServeStepEvent(step=1, step_s=0.1, op="decode", batch=2,
+                       committed=2, replica=0),
+        ServeStepEvent(step=1, step_s=0.4, op="decode", batch=2,
+                       committed=2, replica=1),
+    ])
+    assert n == 3
+    snap = dep.snapshot(1.0, 0.5)
+    assert snap["affinity"] == 1.0
+    assert dep.measured_effective_m() == pytest.approx(1.25)
+
+
+def test_router_events_feed_planner_end_to_end():
+    vocab = ServeEngine.config_for(ARCH, True).vocab_size
+    specs = _trace(4, 5, vocab)
+    router = Router(_engines(2), spill_slack=512)
+    for p, g, a in specs:
+        router.submit(p, g, arrival_step=a)
+    rstats = router.run()
+
+    planner = CapacityPlanner()
+    planner.ingest(router.all_events())
+    assert planner.affinity_hit_rate == pytest.approx(
+        rstats["affinity_hit_rate"]
+    )
+    per = planner.replica_stats()
+    assert sum(int(s["dispatches"]) for s in per.values()) == len(specs)
+    assert 0 < planner.measured_effective_replicas() <= 2.0
