@@ -39,7 +39,14 @@ from repro.core.hemingway import NoFeasiblePlan
 from repro.fleet.cluster import FleetCluster
 from repro.fleet.workloads import ServeDeployment, TrainingJob
 from repro.runtime.chaos import ChaosEvent
-from repro.telemetry import DriftConfig, DriftDetector, Event, RefitEvent
+from repro.telemetry import (
+    DriftConfig,
+    DriftDetector,
+    Event,
+    RefitEvent,
+    SpanEvent,
+)
+from repro.telemetry.trace import SloConfig, SLOMonitor, det_id
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +69,25 @@ class FleetConfig:
     # the trailing window and force a replanning pass (None = off, which
     # keeps pre-drift golden traces bit-identical)
     drift: Optional[DriftConfig] = None
+    # opt-in hierarchical trace spans over *modeled* time: one root span per
+    # tick with per-job and per-deployment children (predicted vs delivered
+    # work), riding the run log's bus outside rows/signatures — default off
+    # so pre-span golden traces stay bit-identical
+    spans: bool = False
+    # opt-in per-deployment SLO burn-rate monitoring: each deployment's
+    # modeled tick latency streams through an SLOMonitor (target = its own
+    # slo_p95_s; the config below carries the budget/window tunables), and a
+    # fast-burn alert grants the autoscaler extra headroom for a few ticks —
+    # early warning that lands several ticks before the drift detector's
+    # windowed refit (None = off, same golden-trace guarantee)
+    slo: Optional[SloConfig] = None
+
+
+# A fired SLO alert boosts the deployment's autoscaling headroom by this
+# factor for this many ticks: capacity tops up on the burn signal instead
+# of waiting for the (slower) drift refit to reprice the pace model.
+SLO_BOOST = 1.25
+SLO_BOOST_TICKS = 6
 
 
 class FleetScheduler:
@@ -84,6 +110,18 @@ class FleetScheduler:
         self._pace_window: Dict[str, deque] = {}
         self._needs_replan: set = set()
         self.pending_events: List[Event] = []
+        # SLO burn-rate monitors (cfg.slo opt-in): one per deployment,
+        # created lazily with the deployment's own p95 target; a fired
+        # alert boosts that deployment's autoscale headroom until the
+        # recorded expiry tick
+        self._slo: Dict[str, SLOMonitor] = {}
+        self._slo_boost_until: Dict[str, int] = {}
+        # trace identity for cfg.spans: derived from the scheduler config
+        # only, so same-scenario runs produce identical span ids; each
+        # workload gets its own lane (export maps it to a Perfetto track)
+        self._trace_id = det_id("trace", "fleet", self.cfg.tick_s)
+        self._lane = {n: i + 1 for i, n in enumerate(
+            sorted(self.jobs) + sorted(self.deployments))}
 
     def drain_events(self) -> List[Event]:
         out, self.pending_events = self.pending_events, []
@@ -103,7 +141,9 @@ class FleetScheduler:
         self._admit_training(step, now_s, decisions)
         self._resize_training(step, now_s, decisions)
         self._account_training(step, now_s, decisions)
-        serve_row = self._account_serve(step, preempted)
+        serve_row = self._account_serve(step, preempted, decisions)
+        if self.cfg.spans:
+            self._emit_tick_spans(step, now_s, serve_row)
 
         self.cost_host_s += self.cluster.n_allocated() * self.cfg.tick_s
         return {
@@ -185,8 +225,12 @@ class FleetScheduler:
         priced at their own degraded speed)."""
         for name in sorted(self.deployments):
             dep = self.deployments[name]
+            headroom = self.cfg.serve_headroom
+            if step < self._slo_boost_until.get(name, 0):
+                # a recent fast-burn alert: over-provision until it expires
+                headroom *= SLO_BOOST
             forecast = (dep.trace.forecast(step, self.cfg.forecast_ticks)
-                        * self.cfg.serve_headroom)
+                        * headroom)
             plan = dep.desired_replicas(forecast)
             if plan:
                 target = float(plan.m)
@@ -518,7 +562,8 @@ class FleetScheduler:
         self._needs_replan.add(name)
 
     def _account_serve(self, step: int,
-                       preempted: Dict[str, List[int]]) -> Dict[str, Any]:
+                       preempted: Dict[str, List[int]],
+                       decisions: List[str]) -> Dict[str, Any]:
         out: Dict[str, Any] = {}
         for name in sorted(self.deployments):
             dep = self.deployments[name]
@@ -530,5 +575,73 @@ class FleetScheduler:
             else:
                 lat = dep.tick_latency(eff, demand)
             dep.latencies.append(lat)
+            if self.cfg.slo is not None:
+                self._observe_slo(step, name, dep, lat, decisions)
             out[name] = dep.snapshot(demand, lat)
         return out
+
+    def _observe_slo(self, step: int, name: str, dep, lat: float,
+                     decisions: List[str]) -> None:
+        """Stream this tick's modeled latency through the deployment's SLO
+        burn-rate monitor (cfg.slo opt-in).  A fast-burn alert — a couple
+        of bad points in a short window — fires ticks before the drift
+        detector's windowed residual mean can, so the alert both rides the
+        bus (``CapacityPlanner.ingest`` consumes it) and grants the
+        autoscaler ``SLO_BOOST`` extra headroom for ``SLO_BOOST_TICKS``."""
+        mon = self._slo.get(name)
+        if mon is None:
+            moncfg = dataclasses.replace(self.cfg.slo, target=dep.slo_p95_s)
+            mon = self._slo[name] = SLOMonitor(
+                moncfg, name=name, objective="tick_p95_latency")
+        alert = mon.observe(step, lat)
+        if alert is not None:
+            self.pending_events.append(alert)
+            self._slo_boost_until[name] = step + 1 + SLO_BOOST_TICKS
+            decisions.append(
+                f"slo_alert:{name}:burn={alert.burn_rate:.2f}")
+
+    # ------------------------------------------------------------------
+    # 7. trace spans over modeled time (cfg.spans opt-in)
+    # ------------------------------------------------------------------
+    def _emit_tick_spans(self, step: int, now_s: float,
+                        serve_row: Dict[str, Any]) -> None:
+        """One modeled-time span tree per tick: a ``fleet.tick`` root of
+        ``tick_s`` wall, a ``fleet.train`` child per running job (measured
+        dur = the useful work the cluster delivered, ``tick_s / pace``;
+        predicted = what the pace model promised, ``tick_s / pace_factor``
+        — attribution's ratio column localizes pace drift per job), and a
+        ``fleet.serve`` child per deployment (dur = modeled tick latency,
+        predicted = its p95 target).  Ids derive from (config, step, name)
+        only, so same-scenario runs emit byte-identical span streams."""
+        tick_id = det_id(self._trace_id, "tick", step)
+        spans = [SpanEvent(
+            trace_id=self._trace_id, span_id=tick_id, name="tick",
+            t0=now_s, dur=self.cfg.tick_s, component="fleet.tick",
+            step=step, replica=0,
+            attrs={"free": len(self.cluster.free_hosts())})]
+        for name in sorted(self.jobs):
+            job = self.jobs[name]
+            if job.state != "running" or job.m == 0:
+                continue
+            pace = self.cluster.bsp_pace(name)
+            spans.append(SpanEvent(
+                trace_id=self._trace_id,
+                span_id=det_id(tick_id, "train", name),
+                parent_id=tick_id, name=f"train:{name}", t0=now_s,
+                dur=self.cfg.tick_s / pace,
+                predicted_s=self.cfg.tick_s / job.pace_factor,
+                component="fleet.train", step=step,
+                replica=self._lane[name],
+                attrs={"m": job.m, "progress": round(job.progress, 9)}))
+        for name, row in sorted(serve_row.items()):
+            dep = self.deployments[name]
+            spans.append(SpanEvent(
+                trace_id=self._trace_id,
+                span_id=det_id(tick_id, "serve", name),
+                parent_id=tick_id, name=f"serve:{name}", t0=now_s,
+                dur=float(row["lat_s"]), predicted_s=dep.slo_p95_s,
+                component="fleet.serve", step=step,
+                replica=self._lane[name],
+                attrs={"m": row["m"], "qps": row["qps"],
+                       "ok": row["ok"]}))
+        self.pending_events.extend(spans)

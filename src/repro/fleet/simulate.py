@@ -15,6 +15,7 @@ three training jobs arriving through the day, with seeded chaos
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.fleet.cluster import FleetCluster
@@ -28,6 +29,14 @@ from repro.fleet.workloads import (
 )
 from repro.runtime.chaos import ChaosEvent, ChaosRunLog, ChaosTrace
 from repro.telemetry import DriftConfig, warn_deprecated
+from repro.telemetry.trace import SloConfig
+
+# Default burn-rate tunables for --slo runs: the per-deployment target is
+# substituted by the scheduler (each deployment's own slo_p95_s); a short
+# window with min_points=2 fires on the second breached tick, several
+# ticks before the drift detector's windowed residual mean can react.
+DEFAULT_FLEET_SLO = SloConfig(target=1.0, budget=0.05, window=8,
+                              burn_threshold=2.0, min_points=2, cooldown=12)
 
 
 # ---------------------------------------------------------------------------
@@ -290,12 +299,16 @@ def run_fleet_sim(seed: int, *, ticks: Optional[int] = None,
                   n_hosts: Optional[int] = None,
                   trace: Optional[ChaosTrace] = None,
                   scenario: str = "day",
-                  drift: bool = False) -> FleetRunLog:
+                  drift: bool = False,
+                  spans: bool = False,
+                  slo: bool = False) -> FleetRunLog:
     """One deterministic fleet run; everything derives from ``seed``.
 
     ``scenario`` picks the builder ("day" or "drift") and its defaults;
-    ``drift`` turns the scheduler's streaming pace refit on (off by
-    default everywhere, so pre-drift goldens stay bit-identical)."""
+    ``drift`` turns the scheduler's streaming pace refit on, ``spans``
+    the modeled-time trace spans, and ``slo`` the per-deployment burn-
+    rate monitors (all off by default everywhere, so pre-existing
+    goldens stay bit-identical)."""
     build, d_ticks, d_tick_s, d_hosts = _SCENARIOS[scenario]
     ticks = d_ticks if ticks is None else ticks
     tick_s = d_tick_s if tick_s is None else tick_s
@@ -305,11 +318,21 @@ def run_fleet_sim(seed: int, *, ticks: Optional[int] = None,
         kwargs["drift"] = drift
     trace, jobs, deployments, cfg = build(seed, **kwargs)
     if drift and cfg.drift is None:
-        cfg = FleetConfig(**{**cfg.__dict__, "drift": DriftConfig()})
+        cfg = dataclasses.replace(cfg, drift=DriftConfig())
+    if spans and not cfg.spans:
+        cfg = dataclasses.replace(cfg, spans=True)
+    if slo and cfg.slo is None:
+        cfg = dataclasses.replace(cfg, slo=DEFAULT_FLEET_SLO)
     # the horizon is the *requested* one, not the trace's: a recorded trace
     # longer (or shorter) than --ticks must not silently change the run
     log = FleetSimulator(trace, jobs, deployments, cfg).run(steps=ticks)
     log.meta.update(seed=seed, ticks=ticks, scenario=scenario, drift=drift)
+    # only recorded when on: logs from before these opt-ins existed (and
+    # runs with them off) keep byte-identical meta blocks
+    if spans:
+        log.meta["spans"] = True
+    if slo:
+        log.meta["slo"] = True
     return log
 
 
@@ -322,4 +345,6 @@ def replay(run_log: FleetRunLog) -> FleetRunLog:
                          n_hosts=int(meta["n_hosts"]),
                          trace=run_log.trace,
                          scenario=meta.get("scenario", "day"),
-                         drift=bool(meta.get("drift", False)))
+                         drift=bool(meta.get("drift", False)),
+                         spans=bool(meta.get("spans", False)),
+                         slo=bool(meta.get("slo", False)))

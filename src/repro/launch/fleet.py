@@ -52,6 +52,13 @@ def main(argv=None) -> int:
     ap.add_argument("--trace", default=None,
                     help="drive the fleet from this ChaosTrace JSON")
     ap.add_argument("--out", default=None, help="write FleetRunLog JSON here")
+    ap.add_argument("--spans", default=None, metavar="TRACE_JSON",
+                    help="emit modeled-time tick/job/deployment spans and "
+                         "export them as a Perfetto trace here")
+    ap.add_argument("--slo", action="store_true",
+                    help="stream each deployment's tick latency through an "
+                         "SLO burn-rate monitor (alerts become decisions "
+                         "and boost autoscale headroom)")
     ap.add_argument("--replay", default=None, metavar="RUN_JSON",
                     help="load a recorded FleetRunLog and verify it replays")
     ap.add_argument("--no-replay", action="store_true",
@@ -84,8 +91,20 @@ def main(argv=None) -> int:
                   f"inventory at {trace.n_hosts} hosts", file=sys.stderr)
     ticks = args.ticks or (trace.steps if trace else DAY_TICKS)
     hosts = trace.n_hosts if trace else (args.hosts or DAY_HOSTS)
-    log = run_fleet_sim(args.seed, ticks=ticks, n_hosts=hosts, trace=trace)
+    log = run_fleet_sim(args.seed, ticks=ticks, n_hosts=hosts, trace=trace,
+                        spans=bool(args.spans), slo=args.slo)
     summarize(log)
+    if args.slo:
+        alerts = log.events("slo_alert")
+        for a in alerts:
+            print(f"  slo_alert tick {a.step:4d} {a.slo}: "
+                  f"burn={a.burn_rate:.2f}x budget "
+                  f"(remaining {a.budget_remaining:.0%})")
+        print(f"slo: {len(alerts)} burn-rate alerts")
+    if args.spans:
+        from repro.telemetry.trace import write_perfetto
+        n = write_perfetto(args.spans, log.events("span"))
+        print(f"trace: {n} spans -> {args.spans}")
     if not args.no_replay:
         again = replay_log(log)
         assert again.signature() == log.signature(), \

@@ -203,8 +203,68 @@ def _resolve_prefill_chunk(value: Optional[int], smoke: bool) -> Optional[int]:
     return chunk
 
 
+def _trace_clock_factory(args):
+    """Per-engine trace clock: fresh CountingClock for ``steps`` (fully
+    deterministic span values -> byte-identical trace files across
+    same-seed runs), ``None`` (wall clock) otherwise."""
+    if args.trace and args.trace_clock == "steps":
+        from repro.telemetry.trace import CountingClock
+
+        return lambda: CountingClock()
+    return lambda: None
+
+
+def _export_trace(args, events, planner, busy_s: float, n_layers: int) -> None:
+    """Write the Perfetto trace + attribution report; exit 1 on failure.
+
+    Reconciliation compares the engine-op span components against the
+    engine's own ``serve_step`` wall time — the same scopes timed by two
+    perf_counter pairs, so the acceptance bound (5%) is generous.  Under
+    ``--trace-clock steps`` span values are synthetic ticks and the wall
+    reconciliation is skipped (byte-identity is the point of that mode)."""
+    from repro.telemetry.trace import (
+        attribute,
+        format_attribution,
+        load_perfetto,
+        validate_perfetto,
+        write_perfetto,
+    )
+
+    fitted = None
+    try:
+        planner.step_time(1)
+        fitted = planner
+    except Exception:
+        pass
+    n = write_perfetto(args.trace, events)
+    errs = validate_perfetto(load_perfetto(args.trace))
+    if errs:
+        print(f"FAIL: trace schema: {errs[:5]}")
+        sys.exit(1)
+    print(f"trace: {n} spans -> {args.trace} (Perfetto/chrome://tracing)")
+    attr = attribute(events, planner=fitted, n_layers=n_layers)
+    print(format_attribution(attr))
+    # serve_step rows time exactly decode, verify, and *chunked* prefill;
+    # monolithic admission prefill (engine.prefill) is span-only (the
+    # engine books it on the request, not the step stream), so it stays
+    # out of the wall reconciliation set
+    engine_ops = ("engine.decode", "engine.verify", "engine.prefill_chunk")
+    span_busy = sum(r.measured_s for r in attr.rows
+                    if r.component in engine_ops)
+    if args.trace_clock == "steps":
+        print("trace: deterministic step clock (wall reconciliation n/a)")
+        return
+    if busy_s > 0:
+        rel = abs(span_busy - busy_s) / busy_s
+        print(f"trace: span/engine wall reconciliation "
+              f"{span_busy:.3f}s vs {busy_s:.3f}s ({rel:.2%})")
+        if rel > 0.05:
+            print("FAIL: trace spans do not reconcile with engine wall time")
+            sys.exit(1)
+
+
 def _run_router(args, specs: List[TraceSpec], reference, n_replicas: int,
-                prefill_chunk: Optional[int]) -> None:
+                prefill_chunk: Optional[int]) -> "Router":
     """Replay the reference trace through a prefix-affinity router over
     ``n_replicas`` engines and assert bit-identical per-request outputs."""
     mesh = None
@@ -216,12 +276,15 @@ def _run_router(args, specs: List[TraceSpec], reference, n_replicas: int,
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
     rt = _serving_runtime(args.page_size, args.paged_impl, mesh=mesh)
 
+    clock = _trace_clock_factory(args)
+
     def make_engine(i: int) -> ServeEngine:
         return ServeEngine(
             args.arch, smoke=args.smoke, max_batch=args.max_batch,
             page_size=args.page_size, max_seq=64 + args.page_size * 2,
             seed=args.seed, rt=rt, prefill_chunk=prefill_chunk,
-            speculate=args.speculate, replica_id=i)
+            speculate=args.speculate, replica_id=i,
+            trace=bool(args.trace), trace_clock=clock())
 
     if mesh is not None:
         # bit-identity is a same-placement guarantee: TP psums reduce in a
@@ -236,7 +299,8 @@ def _run_router(args, specs: List[TraceSpec], reference, n_replicas: int,
         reference.sort(key=lambda r: r.rid)
 
     engines = [make_engine(i) for i in range(n_replicas)]
-    router = Router(engines, spill_slack=args.spill_slack)
+    router = Router(engines, spill_slack=args.spill_slack,
+                    trace=bool(args.trace), trace_clock=clock())
     routed = [router.submit(prompt, gen, arrival_step=arrival,
                             frontend_embeds=fe)
               for prompt, gen, arrival, fe in specs]
@@ -267,6 +331,7 @@ def _run_router(args, specs: List[TraceSpec], reference, n_replicas: int,
     if not identical:
         print("FAIL: routed outputs diverge from the single-engine reference")
         sys.exit(1)
+    return router
 
 
 def main():
@@ -319,11 +384,22 @@ def main():
     ap.add_argument("--router-log", default=None, metavar="PATH",
                     help="dump the combined router + replica event stream "
                          "as JSONL")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="hierarchical span tracing: write a Perfetto/"
+                         "chrome://tracing JSON span tree and print the "
+                         "per-component predicted-vs-measured attribution "
+                         "report (implies --continuous)")
+    ap.add_argument("--trace-clock", default="wall",
+                    choices=["wall", "steps"],
+                    help="span timestamp source: wall (measured; reconciled "
+                         "against engine step timings) or steps "
+                         "(deterministic tick clock; same-seed runs emit "
+                         "byte-identical trace files)")
     ap.add_argument("--tp", type=int, default=1, metavar="K",
                     help="tensor-parallel world size per replica (forces K "
                          "host devices; must be first jax initialization)")
     args = ap.parse_args()
-    if args.router:
+    if args.router or args.trace:
         args.continuous = True
 
     if not args.continuous:
@@ -348,7 +424,9 @@ def main():
                       page_size=args.page_size,
                       max_seq=64 + args.page_size * 2, seed=args.seed,
                       paged_impl=args.paged_impl,
-                      prefill_chunk=prefill_chunk, speculate=args.speculate)
+                      prefill_chunk=prefill_chunk, speculate=args.speculate,
+                      trace=bool(args.trace),
+                      trace_clock=_trace_clock_factory(args)())
     specs = _mixed_trace_specs(eng.cfg, eng.page_size, args.requests,
                                args.seed)
     reqs = [eng.submit(prompt, gen, arrival_step=arrival, frontend_embeds=fe)
@@ -391,12 +469,13 @@ def main():
             sys.exit(1)
 
     planner = CapacityPlanner()
+    tune_evs: List = []
     if args.tune_cache:
         from repro.kernels.tune import ConfigCache, tune_events
 
         n_layers = eng.cfg.n_layers
-        n = planner.ingest(tune_events(ConfigCache(args.tune_cache)),
-                           n_layers=n_layers)
+        tune_evs = list(tune_events(ConfigCache(args.tune_cache)))
+        n = planner.ingest(tune_evs, n_layers=n_layers)
         print(f"capacity plan: seeded with {n} measured kernel row(s) "
               f"from {args.tune_cache} (x{n_layers} layers)")
     planner.ingest(eng.events("serve_step"))
@@ -419,13 +498,22 @@ def main():
             print(f"capacity plan: no feasible operating point "
                   f"({plan.reason})")
 
+    router = None
     if args.router:
         n_replicas = args.replicas
         if n_replicas <= 0:
             n_replicas = plan.m if plan else 2
             print(f"router: --replicas 0 -> planner min-replicas answer "
                   f"m={n_replicas}")
-        _run_router(args, specs, reqs, n_replicas, prefill_chunk)
+        router = _run_router(args, specs, reqs, n_replicas, prefill_chunk)
+
+    if args.trace:
+        trace_events = (router.all_events() if router is not None
+                        else list(eng.events()))
+        busy = sum(e.step_s for e in trace_events
+                   if getattr(e, "kind", "") == "serve_step")
+        _export_trace(args, list(trace_events) + tune_evs, planner, busy,
+                      eng.cfg.n_layers)
 
     ok = _verify_prefix_reuse(args.arch, args.smoke, eng, args.seed)
     if not ok:

@@ -38,7 +38,8 @@ the dispatch size and the guarantee extends to folded verify batches.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from contextlib import nullcontext
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +67,7 @@ from repro.telemetry import (
     Tracker,
     warn_deprecated,
 )
+from repro.telemetry.trace import SpanTracer
 
 
 class ServeEngine:
@@ -87,6 +89,8 @@ class ServeEngine:
         speculate: int = 0,
         draft_ngram: int = 3,
         replica_id: int = -1,
+        trace: bool = False,
+        trace_clock: Optional[Callable[[], float]] = None,
     ):
         self.cfg = self.config_for(arch, smoke)
         if speculate < 0:
@@ -182,24 +186,50 @@ class ServeEngine:
         # replicated, and the eager cache writers (write_prefill,
         # restore_state) hand arrays back to the jit, whose in_shardings
         # re-pin them.
+        # every step timing rides the telemetry bus as a ServeStepEvent;
+        # the deprecated ``telemetry`` property reconstructs legacy rows
+        self.tracker = Tracker([MemorySink()])
+        self._t_s = 0.0
+        # opt-in hierarchical span tracing (DESIGN.md §14): spans share the
+        # engine bus, so events()/to_jsonl carry them alongside serve_step
+        # rows.  IDs are deterministic (seed-derived); timestamps come from
+        # trace_clock (default wall clock — inject CountingClock for
+        # byte-identical trace files across same-seed runs).
+        self.spans: Optional[SpanTracer] = (
+            SpanTracer(
+                self.tracker,
+                trace=("serve", self.cfg.name, seed, replica_id),
+                replica=replica_id,
+                clock=trace_clock,
+            )
+            if trace
+            else None
+        )
+        self.scheduler.tracer = self.spans
         self.plan = ShardingPlan.for_runtime(self.rt)
         if self.plan is not None:
             self.params = self.plan.shard_params(self.params, self.lm.param_axes())
             self.cache = self.plan.shard_cache(self.cache, self.axes)
             self.page_tables_dev = self.plan.put_replicated(self.page_tables_dev)
-            self._decode = self.plan.decode_jit(self.lm, self.params, self.cache)
-            self._chunk = self.plan.prefill_chunk_jit(self.lm, self.params, self.cache)
+            self._decode = self.plan.decode_jit(
+                self.lm, self.params, self.cache, tracer=self.spans
+            )
+            self._chunk = self.plan.prefill_chunk_jit(
+                self.lm, self.params, self.cache, tracer=self.spans
+            )
         self.step_count = 0
         self._rid = 0
         self.replica_id = replica_id
-        # every step timing rides the telemetry bus as a ServeStepEvent;
-        # the deprecated ``telemetry`` property reconstructs legacy rows
-        self.tracker = Tracker([MemorySink()])
-        self._t_s = 0.0
 
     @staticmethod
     def config_for(arch: str, smoke: bool):
         return get_smoke_config(arch) if smoke else get_config(arch)
+
+    def _sp(self, name: str, **attrs):
+        """Span scope when tracing is on, else a free no-op context."""
+        if self.spans is None:
+            return nullcontext()
+        return self.spans.span(name, step=self.step_count, **attrs)
 
     # ------------------------------------------------------------------
     def submit(
@@ -235,10 +265,17 @@ class ServeEngine:
         slot = req.slot
         n_front = 0 if req.frontend_embeds is None else self.cfg.n_frontend_tokens
         if req.prefill_skipped:
-            logits = req.full_entry.last_logits
-            self.cache = restore_state(
-                self.cache, req.full_entry.state, self.axes, slot
-            )
+            with self._sp(
+                "prefill",
+                component="engine.prefill",
+                rid=req.rid,
+                tokens=len(req.prompt),
+                skipped=True,
+            ):
+                logits = req.full_entry.last_logits
+                self.cache = restore_state(
+                    self.cache, req.full_entry.state, self.axes, slot
+                )
         else:
             fe = (
                 None
@@ -246,10 +283,16 @@ class ServeEngine:
                 else jnp.asarray(req.frontend_embeds)[None]
             )
             t0 = time.perf_counter()
-            logits_dev, pre_cache = self._prefill(
-                self.params, jnp.asarray(req.prompt)[None], fe
-            )
-            logits_dev.block_until_ready()
+            with self._sp(
+                "prefill",
+                component="engine.prefill",
+                rid=req.rid,
+                tokens=len(req.prompt),
+            ):
+                logits_dev, pre_cache = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None], fe
+                )
+                logits_dev.block_until_ready()
             req.prefill_s = time.perf_counter() - t0
             self.cache = write_prefill(
                 self.cache,
@@ -318,15 +361,22 @@ class ServeEngine:
         row = np.full(self.pages_per_seq, SCRATCH_PAGE, np.int32)
         row[: len(req.page_ids)] = req.page_ids
         t0 = time.perf_counter()
-        logits_dev, self.cache = self._chunk(
-            self.params,
-            jnp.asarray(chunk)[None],
-            jnp.int32(n_tokens),
-            self.cache,
-            jnp.asarray(row)[None],
+        with self._sp(
+            "prefill_chunk",
+            component="engine.prefill_chunk",
+            rid=req.rid,
+            tokens=n_tokens,
             s0=s0,
-        )
-        logits_dev.block_until_ready()
+        ):
+            logits_dev, self.cache = self._chunk(
+                self.params,
+                jnp.asarray(chunk)[None],
+                jnp.int32(n_tokens),
+                self.cache,
+                jnp.asarray(row)[None],
+                s0=s0,
+            )
+            logits_dev.block_until_ready()
         dt = time.perf_counter() - t0
         req.prefill_s += dt
         req.prefill_pos += n_tokens
@@ -359,6 +409,10 @@ class ServeEngine:
         prefill within its token budget, then run one batched decode (or
         draft-verify) step and retire finished requests.  Returns the number
         of requests that contributed decode tokens."""
+        with self._sp("step", component="engine.step"):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
         for req in self.scheduler.admit_ready(self.step_count):
             if self._use_chunked(req):
                 req.state = RequestState.PREFILLING
@@ -385,14 +439,15 @@ class ServeEngine:
             self.step_count += 1
             return n
         t0 = time.perf_counter()
-        logits_dev, self.cache = self._decode(
-            self.params,
-            jnp.asarray(self.next_tokens),
-            jnp.asarray(self.lengths),
-            self.cache,
-            self.page_tables_dev,
-        )
-        logits_np = np.asarray(logits_dev)
+        with self._sp("decode", component="engine.decode", batch=len(decoding)):
+            logits_dev, self.cache = self._decode(
+                self.params,
+                jnp.asarray(self.next_tokens),
+                jnp.asarray(self.lengths),
+                self.cache,
+                self.page_tables_dev,
+            )
+            logits_np = np.asarray(logits_dev)
         dt = time.perf_counter() - t0
         self._emit(
             "decode", batch=len(decoding), step_s=dt, committed=len(decoding)
@@ -470,14 +525,20 @@ class ServeEngine:
             )
             pts[base: base + 1 + len(d)] = self.page_tables[s]
         t0 = time.perf_counter()
-        logits_dev, self.cache = self._decode(
-            self.params,
-            jnp.asarray(toks),
-            jnp.asarray(lens),
-            self.cache,
-            jnp.asarray(pts),
-        )
-        logits_np = np.asarray(logits_dev)
+        with self._sp(
+            "verify",
+            component="engine.verify",
+            batch=len(decoding),
+            rows=n_rows,
+        ):
+            logits_dev, self.cache = self._decode(
+                self.params,
+                jnp.asarray(toks),
+                jnp.asarray(lens),
+                self.cache,
+                jnp.asarray(pts),
+            )
+            logits_np = np.asarray(logits_dev)
         dt = time.perf_counter() - t0
         total_committed = 0
         total_drafted = 0

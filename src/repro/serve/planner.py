@@ -73,6 +73,10 @@ class CapacityPlanner:
         self._router_hits = 0
         self._router_routable = 0
         self._router_spills = 0
+        # SLO burn-rate alerts from trace.slo.SLOMonitor: an early-warning
+        # signal that the live system is missing its objectives *before*
+        # the drift detector accumulates enough residuals to fire.
+        self._slo_alerts: List = []
 
     def _replica_acc(self, idx: int) -> Dict[str, float]:
         return self._replica.setdefault(
@@ -99,6 +103,9 @@ class CapacityPlanner:
         * ``tune`` — autotuner results for the paged decode kernel seed the
           step model from measured kernel timings: one decode step is
           approximated as ``n_layers * kernel + overhead_s``.
+        * ``slo_alert`` — burn-rate alerts from the SLO monitor are kept
+          (``slo_alerts`` / ``last_slo_alert_step``) so a planner refit can
+          be triggered by budget burn before model drift is detectable.
         * ``router`` — dispatch decisions from a multi-replica router feed
           the affinity-hit rate and per-replica dispatch counts; combined
           with replica-tagged ``serve_step`` rows (``replica >= 0``) the
@@ -144,7 +151,25 @@ class CapacityPlanner:
                     step_s = n_layers * ev.us_per_call * 1e-6 + overhead_s
                     self.observe(int(ev.shape["b"]), step_s)
                     n += 1
+            elif kind == "slo_alert":
+                self._slo_alerts.append(ev)
+                n += 1
         return n
+
+    # ------------------------------------------------------------------
+    # SLO burn-rate alerts (trace.slo.SLOMonitor)
+    # ------------------------------------------------------------------
+    @property
+    def slo_alerts(self) -> List:
+        """Burn-rate alerts ingested so far, in arrival order."""
+        return list(self._slo_alerts)
+
+    @property
+    def last_slo_alert_step(self) -> int:
+        """Step of the most recent SLO alert (-1 when none ingested)."""
+        if not self._slo_alerts:
+            return -1
+        return max(int(a.step) for a in self._slo_alerts)
 
     def observe_telemetry(self, telemetry: Sequence[Dict]) -> None:
         """Thin legacy wrapper over :meth:`ingest` for ``ServeEngine``

@@ -44,6 +44,7 @@ import numpy as np
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Request
 from repro.telemetry import Event, MemorySink, RouterEvent, Tracker
+from repro.telemetry.trace import SpanTracer
 
 
 @dataclasses.dataclass
@@ -71,6 +72,8 @@ class Router:
         engines: List[ServeEngine],
         *,
         spill_slack: int = 512,
+        trace: bool = False,
+        trace_clock=None,
     ):
         if not engines:
             raise ValueError("router needs at least one engine")
@@ -87,10 +90,28 @@ class Router:
         self.spill_slack = spill_slack
         for i, eng in enumerate(engines):
             eng.replica_id = i
+            if eng.spans is not None:
+                # re-key each engine's trace identity to its fleet position
+                # (the engine was built with replica_id=-1); spans emitted
+                # from here on carry the replica tag
+                eng.spans.set_trace(
+                    "serve", eng.cfg.name, eng.seed, i, replica=i
+                )
         self.requests: List[RoutedRequest] = []
         self._queue: List[RoutedRequest] = []
         self.step_count = 0
         self.tracker = Tracker([MemorySink()])
+        # router-side dispatch spans ride the router bus, so all_events()
+        # interleaves them with replica span trees under distinct trace_ids
+        self.spans: Optional[SpanTracer] = (
+            SpanTracer(
+                self.tracker,
+                trace=("router", engines[0].seed, len(engines)),
+                clock=trace_clock,
+            )
+            if trace
+            else None
+        )
 
     # ------------------------------------------------------------------
     def submit(
@@ -117,6 +138,19 @@ class Router:
 
     # ------------------------------------------------------------------
     def _dispatch(self, rr: RoutedRequest) -> None:
+        if self.spans is None:
+            return self._dispatch_inner(rr)
+        with self.spans.span(
+            "dispatch",
+            step=self.step_count,
+            component="router.dispatch",
+            rid=rr.rid,
+        ) as h:
+            self._dispatch_inner(rr)
+            h.set(replica=rr.replica)
+        return None
+
+    def _dispatch_inner(self, rr: RoutedRequest) -> None:
         loads = [eng.scheduler.pending_tokens for eng in self.engines]
         matches = [
             eng.prefix.peek(rr.prompt) if eng.prefix is not None else 0

@@ -81,6 +81,10 @@ class Scheduler:
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.finished: List[Request] = []
+        # optional SpanTracer (set by the owning engine when tracing is on):
+        # admissions emit scheduler.join spans carrying the queue wait,
+        # page accounting emits pages.alloc / pages.evict spans
+        self.tracer: Optional[Any] = None
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -182,11 +186,36 @@ class Scheduler:
             req.admitted_step = now
             self.slots[req.slot] = req
             admitted.append(req)
+            if self.tracer is not None:
+                # queue wait is denominated in engine steps (the scheduler
+                # clock), not wall seconds, so it rides as an attr on a
+                # zero-duration join marker; the SLO monitor reads it as
+                # the join-to-first-token objective's input
+                self.tracer.emit_span(
+                    "join",
+                    dur=0.0,
+                    step=now,
+                    component="scheduler.join",
+                    rid=req.rid,
+                    slot=req.slot,
+                    wait_steps=now - req.arrival_step,
+                    shared_pages=req.n_shared_pages,
+                )
         return admitted
 
     def _allocate(self, req: Request) -> bool:
         """Reserve pages for the request's whole lifetime (prompt + frontend
         + max_new_tokens), reusing shared prefix pages where possible."""
+        if self.tracer is not None:
+            with self.tracer.span(
+                "page_alloc", component="pages.alloc", rid=req.rid
+            ) as h:
+                ok = self._allocate_inner(req)
+                h.set(ok=ok, pages=len(req.page_ids), shared=req.n_shared_pages)
+            return ok
+        return self._allocate_inner(req)
+
+    def _allocate_inner(self, req: Request) -> bool:
         shared: List[int] = []
         use_prefix = self.prefix is not None and req.frontend_embeds is None
         if use_prefix:
@@ -221,6 +250,16 @@ class Scheduler:
         req.state = RequestState.FINISHED
         req.finished_step = now
         self.slots[req.slot] = None
-        self.pool.free(req.page_ids)
+        if self.tracer is not None:
+            with self.tracer.span(
+                "page_evict",
+                step=now,
+                component="pages.evict",
+                rid=req.rid,
+                pages=len(req.page_ids),
+            ):
+                self.pool.free(req.page_ids)
+        else:
+            self.pool.free(req.page_ids)
         req.page_ids = []
         self.finished.append(req)

@@ -14,6 +14,11 @@ over a single typed event stream:
 Inspect a log from the shell::
 
     python -m repro.telemetry summarize run.jsonl
+    python -m repro.telemetry trace run.jsonl
+
+Hierarchical span tracing, attribution, and SLO burn-rate monitoring
+live in :mod:`repro.telemetry.trace` (DESIGN.md §14); the span/alert
+event kinds are part of the core schema so any log replays.
 """
 
 from .events import (
@@ -27,6 +32,8 @@ from .events import (
     RunMeta,
     SchemaError,
     ServeStepEvent,
+    SloAlertEvent,
+    SpanEvent,
     TuneEvent,
     from_dict,
     from_legacy,
@@ -49,6 +56,7 @@ from .refit import (
 from .tracker import (
     JSONLSink,
     MemorySink,
+    P2Quantile,
     Sink,
     StatsSink,
     Tracker,
@@ -70,12 +78,15 @@ __all__ = [
     "FleetTickEvent",
     "JSONLSink",
     "MemorySink",
+    "P2Quantile",
     "RefitEvent",
     "RouterEvent",
     "RunMeta",
     "SchemaError",
     "ServeStepEvent",
     "Sink",
+    "SloAlertEvent",
+    "SpanEvent",
     "StatsSink",
     "StreamingCapacity",
     "StreamingConvergence",

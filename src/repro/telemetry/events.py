@@ -347,6 +347,66 @@ class FleetTickEvent(Event):
 
 
 # ---------------------------------------------------------------------------
+# hierarchical trace spans + SLO burn-rate alerts (no legacy shape)
+# ---------------------------------------------------------------------------
+
+
+@register
+@dataclass(frozen=True)
+class SpanEvent(Event):
+    """One timed scope in a hierarchical trace.
+
+    ``trace_id``/``span_id``/``parent_id`` are deterministic hex digests
+    derived from the run seed plus a monotonic per-tracer sequence — no
+    wall-clock or randomness feeds the IDs, so traces from the same seed
+    replay with bit-identical structure.  ``t0``/``dur`` are seconds
+    relative to the tracer epoch; with the default wall clock they carry
+    measured time, with an injected deterministic clock (modeled fleet
+    time, or ``CountingClock`` in tests) the whole span stream — file
+    bytes included — is reproducible.  ``predicted_s`` optionally holds
+    the model's forecast for the scope (ErnestModel / CapacityPlanner /
+    tune-cache kernel cost) so attribution can compare predicted vs
+    measured per component."""
+
+    kind: ClassVar[str] = "span"
+
+    trace_id: str
+    span_id: str
+    name: str
+    t0: float
+    dur: float
+    parent_id: str = ""
+    component: str = ""
+    step: int = 0
+    replica: int = -1
+    predicted_s: Optional[float] = None
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+
+@register
+@dataclass(frozen=True)
+class SloAlertEvent(Event):
+    """A service-level objective is burning error budget too fast.
+
+    Emitted by ``trace.slo.SLOMonitor`` when the bad-event fraction over
+    the rolling window exceeds ``burn_threshold`` times the allowed
+    budget.  ``burn_rate`` of 1.0 means the budget is being consumed
+    exactly at the sustainable rate; 2x+ is the classic fast-burn page."""
+
+    kind: ClassVar[str] = "slo_alert"
+
+    step: int
+    slo: str  # monitor name, e.g. "serve_bg" or "per_token"
+    objective: str  # "join_to_first_token" | "per_token_latency" | ...
+    target: float  # threshold a good observation must stay under
+    burn_rate: float  # window bad-fraction / budget
+    budget: float  # allowed bad fraction (error budget)
+    window_bad: int  # bad observations in the rolling window
+    window: int  # rolling window size
+    budget_remaining: float = 1.0  # lifetime error budget left (0..1)
+
+
+# ---------------------------------------------------------------------------
 # streaming-refit lifecycle
 # ---------------------------------------------------------------------------
 

@@ -36,6 +36,12 @@ class Sink:
     def close(self) -> None:
         self.flush()
 
+    def __enter__(self) -> "Sink":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
 
 class MemorySink(Sink):
     """Keep events in memory (optionally a bounded ring)."""
@@ -75,14 +81,103 @@ class JSONLSink(Sink):
             self._buf = []
 
 
+class P2Quantile:
+    """Streaming quantile estimate via the P² algorithm (Jain & Chlamtac).
+
+    Five markers track the target quantile without buffering the stream;
+    below five observations the estimate is exact (sorted lookup).  Each
+    ``observe`` is O(1), so a sink can afford one estimator per numeric
+    field per kind."""
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {p}")
+        self.p = p
+        self._n = 0
+        self._q: List[float] = []  # marker heights
+        self._pos: List[float] = []  # marker positions (1-based)
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self._n += 1
+        if self._n <= 5:
+            self._q.append(x)
+            self._q.sort()
+            if self._n == 5:
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+            return
+        q, pos, p = self._q, self._pos, self.p
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        n = pos[4]
+        # desired positions for the five markers at stream length n
+        desired = [
+            1.0,
+            1.0 + (n - 1) * p / 2.0,
+            1.0 + (n - 1) * p,
+            1.0 + (n - 1) * (1.0 + p) / 2.0,
+            n,
+        ]
+        for i in (1, 2, 3):
+            d = desired[i] - pos[i]
+            if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or (d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                d = 1.0 if d >= 0 else -1.0
+                # parabolic (piecewise-quadratic) prediction of the new height
+                qi = q[i] + d / (pos[i + 1] - pos[i - 1]) * (
+                    (pos[i] - pos[i - 1] + d) * (q[i + 1] - q[i]) / (pos[i + 1] - pos[i])
+                    + (pos[i + 1] - pos[i] - d) * (q[i] - q[i - 1]) / (pos[i] - pos[i - 1])
+                )
+                if not q[i - 1] < qi < q[i + 1]:
+                    # parabola escaped the bracket: fall back to linear
+                    j = i + (1 if d > 0 else -1)
+                    qi = q[i] + d * (q[j] - q[i]) / (pos[j] - pos[i])
+                q[i] = qi
+                pos[i] += d
+
+    def value(self) -> float:
+        if self._n == 0:
+            return float("nan")
+        if self._n <= 5:
+            # exact while the sample fits in the marker buffer
+            s = sorted(self._q)
+            idx = self.p * (len(s) - 1)
+            lo = int(idx)
+            hi = min(lo + 1, len(s) - 1)
+            return s[lo] + (idx - lo) * (s[hi] - s[lo])
+        return self._q[2]
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+
+#: percentiles every StatsSink tracks per numeric field
+STATS_PERCENTILES = (0.5, 0.95, 0.99)
+
+
 class StatsSink(Sink):
-    """Fold events into per-kind counts and numeric-field aggregates."""
+    """Fold events into per-kind counts and numeric-field aggregates.
+
+    Besides min/mean/max, each numeric field carries streaming
+    p50/p95/p99 estimates (P² — constant memory, no buffering), so
+    ``summarize`` and SLO reports see real latency percentiles."""
 
     def __init__(self):
         self.counts: Dict[str, int] = {}
         self._sums: Dict[str, Dict[str, float]] = {}
         self._mins: Dict[str, Dict[str, float]] = {}
         self._maxs: Dict[str, Dict[str, float]] = {}
+        self._quant: Dict[str, Dict[str, Dict[float, P2Quantile]]] = {}
 
     def write(self, event: Event) -> None:
         k = event.kind
@@ -90,12 +185,16 @@ class StatsSink(Sink):
         sums = self._sums.setdefault(k, {})
         mins = self._mins.setdefault(k, {})
         maxs = self._maxs.setdefault(k, {})
+        quant = self._quant.setdefault(k, {})
         for name, v in event.to_dict().items():
             if name in ("kind", "v") or isinstance(v, bool) or not isinstance(v, (int, float)):
                 continue
             sums[name] = sums.get(name, 0.0) + v
             mins[name] = min(mins.get(name, v), v)
             maxs[name] = max(maxs.get(name, v), v)
+            est = quant.setdefault(name, {p: P2Quantile(p) for p in STATS_PERCENTILES})
+            for q in est.values():
+                q.observe(v)
 
     def summary(self) -> Dict[str, Dict[str, Any]]:
         out: Dict[str, Dict[str, Any]] = {}
@@ -107,6 +206,8 @@ class StatsSink(Sink):
                     "min": self._mins[k][name],
                     "max": self._maxs[k][name],
                 }
+                for p, est in self._quant[k][name].items():
+                    fields[name][f"p{int(p * 100)}"] = est.value()
             out[k] = {"count": n, "fields": fields}
         return out
 
@@ -141,6 +242,12 @@ class Tracker:
         for s in self.sinks:
             s.close()
 
+    def __enter__(self) -> "Tracker":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
     # -- read side (delegates to the first capable sink) --------------------
 
     def _memory(self) -> Optional[MemorySink]:
@@ -173,24 +280,60 @@ class Tracker:
 
 
 def read_events(path) -> List[Event]:
-    """Parse a JSONL event log back into typed events."""
-    return [from_dict(d) for d in tio.read_jsonl(path)]
+    """Parse a JSONL event log back into typed events.
+
+    A torn *trailing* line (a writer died mid-append between flush
+    boundaries) is skipped with a warning instead of raising — every
+    complete row before it is still returned.  Malformed JSON anywhere
+    else in the file is still an error: that is corruption, not a torn
+    tail."""
+    with open(path, "r", encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    out: List[Event] = []
+    last = len(lines) - 1
+    for i, line in enumerate(lines):
+        s = line.strip()
+        if not s:
+            continue
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError:
+            if i == last:
+                warnings.warn(
+                    f"{path}: skipping torn trailing line ({len(s)} bytes)",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
+            raise
+        out.append(from_dict(d))
+    return out
 
 
-def log_from_device(tracker: Tracker, make_event: Callable[..., Event], *args: Any) -> None:
+def log_from_device(
+    tracker: Tracker,
+    make_event: Callable[..., Event],
+    *args: Any,
+    ordered: bool = False,
+) -> None:
     """Emit an event from inside jit-compiled code.
 
     ``make_event`` runs host-side under ``jax.debug.callback`` with the
     traced ``args`` materialized as concrete arrays; it must build the
     Event (converting scalars with ``int``/``float``).  Keep this off
     per-step hot paths — it is for sparse diagnostics, not inner loops.
+
+    With ``ordered=True`` the callback is sequenced with every other
+    ordered callback in the computation, so multiple emissions inside
+    one jitted step land on the bus in program order — required when the
+    events form a span hierarchy or any reader assumes emit order.
     """
     import jax  # local import: the bus itself has no jax dependency
 
     def _cb(*vals):
         tracker.emit(make_event(*vals))
 
-    jax.debug.callback(_cb, *args)
+    jax.debug.callback(_cb, *args, ordered=ordered)
 
 
 _DEFAULT: Optional[Tracker] = None
