@@ -1,0 +1,11 @@
+"""Async, sharded, crash-safe checkpointing (see manager.py for the
+on-disk format and the commit protocol)."""
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    CheckpointWrite,
+    CorruptCheckpoint,
+    FORMAT_VERSION,
+)
+
+__all__ = ["CheckpointManager", "CheckpointWrite", "CorruptCheckpoint",
+           "FORMAT_VERSION"]

@@ -1,29 +1,66 @@
 """Sharded, atomic, async checkpointing with keep-k retention.
 
-Layout:  <dir>/step_<N>/
-           manifest.json        (flat key -> shape/dtype, metadata, data state)
-           arrays.npz           (flattened '/'-joined key -> host array)
-           COMMITTED            (written last -> atomic visibility)
+Layout (format 2):  <dir>/step_<N>/
+           shard_0000.npz ...    (balanced key partitions of the flat tree)
+           manifest.json         (schema, shard index, metadata — written LAST)
+           COMMITTED             (legacy marker, kept for external tooling)
 
-* ``save`` gathers each leaf to host memory (per-shard in a real multi-host
-  deployment — here addressable shards are assembled) and hands the write to
-  a background thread; training continues (async checkpointing).
-* ``restore`` returns host arrays + metadata; ``restore_sharded`` re-places
-  them onto ANY mesh/sharding — this is the elastic-rescale path (a
-  checkpoint taken on 256 chips restores onto 8, 32, 512, ...).
-* Retention: keep the most recent ``keep`` COMMITTED checkpoints.
+Crash-safety protocol: every file goes through ``telemetry.io`` atomic
+write-temp-then-rename, and the manifest is written *after* every shard —
+its presence is the commit point.  A crash at any instant leaves either a
+previous complete checkpoint or a step directory without a valid manifest,
+which ``all_steps``/``restore`` skip.  A ``file_lock`` sidecar serializes
+writers across processes (two trainers pointed at one directory cannot
+interleave shard writes).
+
+* ``save_async`` snapshots each leaf to host memory at call time (the
+  donate-safe copy — training may mutate device buffers immediately after)
+  and hands the write to a background thread, returning a
+  :class:`CheckpointWrite` handle; ``wait()`` is the barrier.
+* ``save`` is the pre-format-2 synchronous-signature shim (warn-once).
+* ``restore`` validates the manifest schema and shard set and raises a
+  typed :class:`CorruptCheckpoint` on any torn/invalid step — then falls
+  back to the previous complete step with a ``RuntimeWarning`` instead of
+  dying mid-recovery.
+* ``restore_sharded`` re-places host shards onto ANY mesh/sharding — the
+  elastic-rescale path (a checkpoint taken on 256 chips restores onto 8).
+* Retention: keep the most recent ``keep`` checkpoints; the newest
+  *complete* manifest is never deleted.
+* Measured costs: every save/restore appends ``{op, step, wall_s, bytes}``
+  to ``timings`` — the chaos/fleet loops feed these wall-times back into
+  their resize models instead of assuming a constant.
 """
 from __future__ import annotations
 
+import io as _io
 import json
 import shutil
 import threading
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.telemetry.io import (
+    atomic_write_bytes,
+    atomic_write_json,
+    atomic_write_text,
+    file_lock,
+)
+
+FORMAT_VERSION = 2
+
+# default shard sizing: one shard per ~64 MiB of leaf bytes, capped
+_SHARD_BYTES = 64 << 20
+_MAX_SHARDS = 16
+
+
+class CorruptCheckpoint(RuntimeError):
+    """A step directory failed validation: torn or unparseable manifest,
+    schema/shard-count mismatch, or an unreadable shard file."""
 
 
 def _flatten(tree, prefix="") -> Dict[str, Any]:
@@ -60,35 +97,94 @@ def _unflatten(flat: Dict[str, Any]):
     return fix(root)
 
 
+class CheckpointWrite:
+    """Handle for one in-flight (or finished) checkpoint write."""
+
+    def __init__(self, step: int):
+        self.step = int(step)
+        self.wall_s: Optional[float] = None   # set when the write commits
+        self.nbytes = 0
+        self.n_shards = 0
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> "CheckpointWrite":
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+        return self
+
+    @property
+    def done(self) -> bool:
+        return self._thread is None or not self._thread.is_alive()
+
+
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep: int = 3,
-                 async_write: bool = True):
+                 async_write: bool = True, shard_bytes: int = _SHARD_BYTES,
+                 max_shards: int = _MAX_SHARDS):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_write = async_write
-        self._thread: Optional[threading.Thread] = None
+        self.shard_bytes = int(shard_bytes)
+        self.max_shards = int(max_shards)
+        self._pending: Optional[CheckpointWrite] = None
+        # measured wall-times, oldest first: {"op", "step", "wall_s", "bytes"}
+        self.timings: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------------------
-    def save(self, step: int, tree, metadata: Optional[Dict] = None,
-             block: bool = False) -> None:
+    # save
+    # ------------------------------------------------------------------
+    def save_async(self, step: int, tree,
+                   metadata: Optional[Dict] = None) -> CheckpointWrite:
+        """Snapshot ``tree`` to host memory NOW and flush it to disk on a
+        background writer thread.  Returns a handle; ``wait()``/the next
+        ``save_async`` is the barrier (one outstanding write at a time)."""
         flat = _flatten(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         meta = dict(metadata or {})
         meta["step"] = int(step)
         self.wait()  # one outstanding async write at a time
-        if self.async_write and not block:
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host, meta), daemon=True)
-            self._thread.start()
+        handle = CheckpointWrite(step)
+        if self.async_write:
+            handle._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host, meta, handle),
+                daemon=True)
+            handle._thread.start()
+            self._pending = handle
         else:
-            self._write(step, host, meta)
+            self._write_guarded(step, host, meta, handle)
+            handle.wait()
+        return handle
+
+    _warned_legacy_save = False
+
+    def save(self, step: int, tree, metadata: Optional[Dict] = None,
+             block: bool = False) -> None:
+        """Pre-format-2 signature (synchronous when ``block`` or the manager
+        was built with ``async_write=False``).  Warn-once shim over
+        :meth:`save_async` so old chaos/fleet drivers replay unchanged."""
+        if not CheckpointManager._warned_legacy_save:
+            CheckpointManager._warned_legacy_save = True
+            warnings.warn(
+                "CheckpointManager.save(step, tree, block=...) is deprecated; "
+                "use save_async(step, tree).wait() for a barrier",
+                DeprecationWarning, stacklevel=2)
+        handle = self.save_async(step, tree, metadata)
+        if block:
+            handle.wait()
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Barrier: block until the in-flight write (if any) has committed."""
+        if self._pending is not None:
+            pending, self._pending = self._pending, None
+            pending.wait()
 
+    # ------------------------------------------------------------------
     @staticmethod
     def _to_savable(v: np.ndarray) -> np.ndarray:
         # numpy's npz can't represent ml_dtypes (bfloat16/fp8); store the raw
@@ -98,37 +194,119 @@ class CheckpointManager:
             return v.view({1: np.uint8, 2: np.uint16}[v.dtype.itemsize])
         return v
 
-    def _write(self, step: int, host: Dict[str, np.ndarray], meta: Dict):
-        final = self.dir / f"step_{step:08d}"
-        tmp = self.dir / f".tmp_step_{step:08d}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        np.savez(tmp / "arrays.npz",
-                 **{k: self._to_savable(v) for k, v in host.items()})
-        manifest = {
-            "metadata": meta,
-            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                       for k, v in host.items()},
-            "written_at": time.time(),
-        }
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
-        (tmp / "COMMITTED").write_text("ok")
-        if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)
-        self._gc()
+    def _partition(self, host: Dict[str, np.ndarray]) -> List[List[str]]:
+        """Deterministic balanced key partition: big leaves first, each onto
+        the lightest shard."""
+        total = sum(v.nbytes for v in host.values())
+        n = max(1, min(self.max_shards, len(host),
+                       -(-total // max(self.shard_bytes, 1))))
+        loads = [0] * n
+        shards: List[List[str]] = [[] for _ in range(n)]
+        for key in sorted(host, key=lambda k: (-host[k].nbytes, k)):
+            i = min(range(n), key=lambda j: (loads[j], j))
+            loads[i] += host[key].nbytes
+            shards[i].append(key)
+        return [sorted(s) for s in shards if s]
+
+    def _write_guarded(self, step, host, meta, handle: CheckpointWrite):
+        try:
+            self._write(step, host, meta, handle)
+        except BaseException as e:  # surfaced on wait(), not lost in the thread
+            handle._error = e
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], meta: Dict,
+               handle: CheckpointWrite):
+        t0 = time.perf_counter()
+        with file_lock(self.dir / ".ckpt.lock"):
+            final = self.dir / f"step_{step:08d}"
+            if final.exists() and not self._complete(final):
+                shutil.rmtree(final)  # torn remains of a crashed writer
+            final.mkdir(parents=True, exist_ok=True)
+            shard_keys = self._partition(host)
+            shard_index = []
+            for i, keys in enumerate(shard_keys):
+                buf = _io.BytesIO()
+                np.savez(buf, **{k: self._to_savable(host[k]) for k in keys})
+                atomic_write_bytes(final / f"shard_{i:04d}.npz", buf.getvalue())
+                shard_index.append({
+                    "file": f"shard_{i:04d}.npz",
+                    "arrays": {k: {"shape": list(host[k].shape),
+                                   "dtype": str(host[k].dtype)}
+                               for k in keys},
+                })
+            manifest = {
+                "format": FORMAT_VERSION,
+                "step": int(step),
+                "metadata": meta,
+                "n_shards": len(shard_index),
+                "shards": shard_index,
+                "written_at": time.time(),
+            }
+            # the manifest is the commit point: written last, atomically
+            atomic_write_json(final / "manifest.json", manifest)
+            atomic_write_text(final / "COMMITTED", "ok")  # legacy marker
+            self._gc()
+        handle.nbytes = sum(v.nbytes for v in host.values())
+        handle.n_shards = len(shard_index)
+        handle.wall_s = time.perf_counter() - t0
+        self.timings.append({"op": "save", "step": int(step),
+                             "wall_s": handle.wall_s,
+                             "bytes": handle.nbytes})
 
     def _gc(self) -> None:
+        # never deletes the newest complete manifest: candidates are drawn
+        # from the complete set, oldest first, keeping the last ``keep``
         steps = self.all_steps()
         for s in steps[: max(len(steps) - self.keep, 0)]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     # ------------------------------------------------------------------
+    # discovery / validation
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _manifest(path: Path) -> Dict:
+        mpath = path / "manifest.json"
+        if not mpath.exists():
+            raise CorruptCheckpoint(f"{path.name}: no manifest")
+        try:
+            manifest = json.loads(mpath.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            raise CorruptCheckpoint(f"{path.name}: unreadable manifest: {e}")
+        if not isinstance(manifest, dict) or "metadata" not in manifest:
+            raise CorruptCheckpoint(f"{path.name}: manifest schema invalid")
+        fmt = manifest.get("format", 1)
+        if fmt > FORMAT_VERSION:
+            raise CorruptCheckpoint(
+                f"{path.name}: format {fmt} is newer than supported "
+                f"({FORMAT_VERSION})")
+        if fmt >= 2:
+            shards = manifest.get("shards")
+            if not isinstance(shards, list) or \
+                    manifest.get("n_shards") != len(shards):
+                raise CorruptCheckpoint(f"{path.name}: shard count mismatch")
+            for entry in shards:
+                if not (path / entry["file"]).exists():
+                    raise CorruptCheckpoint(
+                        f"{path.name}: missing shard {entry['file']}")
+        else:  # format-1 layout: single arrays.npz + COMMITTED marker
+            if "arrays" not in manifest:
+                raise CorruptCheckpoint(f"{path.name}: manifest schema invalid")
+            if not (path / "COMMITTED").exists() or \
+                    not (path / "arrays.npz").exists():
+                raise CorruptCheckpoint(f"{path.name}: uncommitted legacy step")
+        return manifest
+
+    def _complete(self, path: Path) -> bool:
+        try:
+            self._manifest(path)
+            return True
+        except CorruptCheckpoint:
+            return False
+
     def all_steps(self) -> List[int]:
         steps = []
         for p in self.dir.glob("step_*"):
-            if (p / "COMMITTED").exists():
+            if self._complete(p):
                 steps.append(int(p.name.split("_")[1]))
         return sorted(steps)
 
@@ -136,25 +314,79 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: Optional[int] = None) -> Tuple[Any, Dict]:
-        """Returns (host tree, metadata)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _load_npz(path: Path, dtypes: Dict[str, str]) -> Dict[str, np.ndarray]:
+        try:
+            with np.load(path) as z:
+                flat = {}
+                for k in z.files:
+                    arr = z[k]
+                    want = dtypes.get(k, str(arr.dtype))
+                    if want != str(arr.dtype):
+                        import ml_dtypes  # noqa: F401 — registers np views
+                        arr = arr.view(np.dtype(want))
+                    flat[k] = arr
+            return flat
+        except (OSError, ValueError, KeyError) as e:  # BadZipFile is OSError
+            raise CorruptCheckpoint(f"{path.name}: unreadable shard: {e}")
+
+    def _load_step(self, step: int) -> Tuple[Any, Dict]:
         path = self.dir / f"step_{step:08d}"
-        manifest = json.loads((path / "manifest.json").read_text())
-        dtypes = {k: v["dtype"] for k, v in manifest["arrays"].items()}
-        with np.load(path / "arrays.npz") as z:
-            flat = {}
-            for k in z.files:
-                arr = z[k]
-                want = dtypes.get(k, str(arr.dtype))
-                if want != str(arr.dtype):
-                    import ml_dtypes  # noqa: F401 — registers np views
-                    arr = arr.view(np.dtype(want))
-                flat[k] = arr
+        if not path.exists():
+            raise CorruptCheckpoint(f"step_{step:08d}: no such checkpoint")
+        manifest = self._manifest(path)
+        flat: Dict[str, np.ndarray] = {}
+        if manifest.get("format", 1) >= 2:
+            for entry in manifest["shards"]:
+                dtypes = {k: v["dtype"] for k, v in entry["arrays"].items()}
+                part = self._load_npz(path / entry["file"], dtypes)
+                if set(part) != set(entry["arrays"]):
+                    raise CorruptCheckpoint(
+                        f"{path.name}/{entry['file']}: key set does not "
+                        f"match manifest")
+                flat.update(part)
+        else:
+            dtypes = {k: v["dtype"] for k, v in manifest["arrays"].items()}
+            flat = self._load_npz(path / "arrays.npz", dtypes)
         return _unflatten(flat), manifest["metadata"]
+
+    def restore(self, step: Optional[int] = None, *,
+                fallback: bool = True) -> Tuple[Any, Dict]:
+        """Returns (host tree, metadata).  A corrupt step falls back to the
+        previous complete one with a ``RuntimeWarning`` (``fallback=False``
+        raises the typed :class:`CorruptCheckpoint` instead)."""
+        t0 = time.perf_counter()
+        complete = self.all_steps()
+        if step is None:
+            if not complete:
+                raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+            candidates = list(reversed(complete))
+        else:
+            candidates = [step] + [s for s in reversed(complete) if s < step]
+        last_err: Optional[CorruptCheckpoint] = None
+        for i, s in enumerate(candidates):
+            try:
+                tree, meta = self._load_step(s)
+            except CorruptCheckpoint as e:
+                last_err = e
+                if not fallback:
+                    raise
+                continue
+            if i > 0:
+                warnings.warn(
+                    f"checkpoint step {candidates[0]} is corrupt "
+                    f"({last_err}); fell back to step {s}", RuntimeWarning,
+                    stacklevel=2)
+            self.timings.append({"op": "restore", "step": int(s),
+                                 "wall_s": time.perf_counter() - t0,
+                                 "bytes": sum(np.asarray(v).nbytes for v in
+                                              _flatten(tree).values())})
+            return tree, meta
+        assert last_err is not None
+        raise last_err
 
     def restore_sharded(self, shardings, step: Optional[int] = None
                         ) -> Tuple[Any, Dict]:
@@ -167,3 +399,11 @@ class CheckpointManager:
 
         placed = jax.tree.map(place, host, shardings)
         return placed, meta
+
+    # ------------------------------------------------------------------
+    def last_timing(self, op: str) -> Optional[Dict[str, Any]]:
+        """Most recent measured wall-time entry for ``op`` ('save'/'restore')."""
+        for entry in reversed(self.timings):
+            if entry["op"] == op:
+                return entry
+        return None

@@ -8,6 +8,7 @@ from repro.fleet.simulate import (
     FleetSimulator,
     build_day_scenario,
     build_drift_scenario,
+    build_migration_scenario,
     replay,
     run_fleet_sim,
 )
@@ -33,6 +34,7 @@ __all__ = [
     "TrainingJob",
     "build_day_scenario",
     "build_drift_scenario",
+    "build_migration_scenario",
     "replay",
     "run_fleet_sim",
     "serve_capacity_planner",

@@ -45,6 +45,7 @@ from repro.telemetry import (
     Event,
     RefitEvent,
     SpanEvent,
+    StreamingCost,
 )
 from repro.telemetry.trace import SloConfig, SLOMonitor, det_id
 
@@ -81,6 +82,14 @@ class FleetConfig:
     # early warning that lands several ticks before the drift detector's
     # windowed refit (None = off, same golden-trace guarantee)
     slo: Optional[SloConfig] = None
+    # opt-in measured-recovery-cost refit: every restore/re-shard a job
+    # actually pays feeds a per-job StreamingCost, and once the detector
+    # sees the assumed reshard/restore constants are persistently wrong
+    # the learned cost replaces them in resize planning — the feedback
+    # loop that lets a cheap async-checkpoint/migration path flip resize
+    # decisions the stop-the-world assumption would veto (None = off,
+    # which keeps pre-measurement golden traces bit-identical)
+    measured: Optional[DriftConfig] = None
 
 
 # A fired SLO alert boosts the deployment's autoscaling headroom by this
@@ -110,6 +119,10 @@ class FleetScheduler:
         self._pace_window: Dict[str, deque] = {}
         self._needs_replan: set = set()
         self.pending_events: List[Event] = []
+        # measured-recovery-cost estimators (cfg.measured opt-in): one per
+        # job; restore AND re-shard observations share it, because both
+        # ops reduce to the same place-shards-from-manifest move
+        self._recovery_cost: Dict[str, StreamingCost] = {}
         # SLO burn-rate monitors (cfg.slo opt-in): one per deployment,
         # created lazily with the deployment's own p95 target; a fired
         # alert boosts that deployment's autoscale headroom until the
@@ -172,18 +185,52 @@ class FleetScheduler:
                 # preempted replicas return fresh: capacity dip is priced
                 # into this tick's latency (exclude list), nothing to do
             elif owner in self.jobs:
-                self._reconcile_job(self.jobs[owner],
+                self._reconcile_job(step, self.jobs[owner],
                                     lost.get(owner, []),
                                     preempted.get(owner, []), decisions)
 
-    def _rollback(self, job: TrainingJob) -> None:
+    # ------------------------------------------------------------------
+    # measured recovery costs (cfg.measured opt-in)
+    # ------------------------------------------------------------------
+    def _planned_recovery_s(self, job: TrainingJob, assumed: float) -> float:
+        """The recovery cost resize planning prices in: the per-job learned
+        estimate once the measured-cost refit has fired, the assumed config
+        constant until then (and always when ``cfg.measured`` is off)."""
+        est = self._recovery_cost.get(job.name)
+        if est is not None and est.learned is not None:
+            return est.estimate_s
+        return assumed
+
+    def _charge_recovery(self, step: int, job: TrainingJob, op: str,
+                         assumed: float, decisions: List[str]) -> None:
+        """Charge the job what a recovery ACTUALLY costs, and (opt-in) feed
+        the measurement into its streaming cost estimator so planning stops
+        trusting the assumed constant once it is persistently wrong."""
+        actual = (job.actual_recovery_s if job.actual_recovery_s is not None
+                  else assumed)
+        job.penalty_s += actual
+        if self.cfg.measured is None:
+            return
+        est = self._recovery_cost.get(job.name)
+        if est is None:
+            est = self._recovery_cost[job.name] = StreamingCost(
+                f"recovery:{job.name}", self.cfg.reshard_cost_s,
+                self.cfg.measured)
+        events = est.observe(step, actual, op=op, workload=job.name)
+        self.pending_events.extend(events)
+        if any(isinstance(e, RefitEvent) for e in events):
+            decisions.append(f"recost:{job.name}:{est.estimate_s:.0f}s")
+
+    def _rollback(self, step: int, job: TrainingJob,
+                  decisions: List[str]) -> None:
         job.progress = job.ckpt_progress
-        job.penalty_s += self.cfg.restore_cost_s
+        self._charge_recovery(step, job, "restore", self.cfg.restore_cost_s,
+                              decisions)
         job.since_ckpt_s = 0.0
         if job.executor is not None:
             job.executor.restore()
 
-    def _reconcile_job(self, job: TrainingJob, lost: List[int],
+    def _reconcile_job(self, step: int, job: TrainingJob, lost: List[int],
                        preempted: List[int], decisions: List[str]) -> None:
         if job.state != "running":
             return
@@ -191,7 +238,7 @@ class FleetScheduler:
             survivors = sorted(self.cluster.owned(job.name),
                                key=lambda h: (self.cluster.host_multiplier(h),
                                               h))
-            self._rollback(job)
+            self._rollback(step, job, decisions)
             # only sizes the model says can still reach eps are acceptable
             # landing spots; otherwise requeue and let admission re-plan
             fits = [m for m in job.m_options if m <= len(survivors)
@@ -210,7 +257,7 @@ class FleetScheduler:
         elif preempted:
             # capacity survives (host returns fresh) but in-flight BSP work
             # since the last checkpoint is gone
-            self._rollback(job)
+            self._rollback(step, job, decisions)
             decisions.append(
                 f"restore:{job.name}:preempt{sorted(preempted)}")
 
@@ -323,7 +370,7 @@ class FleetScheduler:
                      and job.remaining_s(m) is not None]
             if lower:
                 target = max(lower)
-                self._execute_resize(job, target, f"serve:{dep_name}",
+                self._execute_resize(step, job, target, f"serve:{dep_name}",
                                      decisions)
                 # a forced shrink is still a resize: start its cooldown so
                 # the no-flap guard covers the follow-up grow as well
@@ -332,7 +379,7 @@ class FleetScheduler:
                     f"preempt:{job.name}:m={target}:serve={dep_name}")
             else:
                 self.cluster.release_all(job.name)
-                self._rollback(job)
+                self._rollback(step, job, decisions)
                 job.state, job.m = "queued", 0
                 decisions.append(f"evict:{job.name}:serve={dep_name}")
 
@@ -413,14 +460,16 @@ class FleetScheduler:
             if in_cooldown and not (at_risk or replan):
                 continue
             candidates: Dict[int, float] = {}
+            # price a resize with the measured recovery cost once it has
+            # been learned (cfg.measured), the assumed constant otherwise
+            reshard_s = self._planned_recovery_s(job, self.cfg.reshard_cost_s)
             for m in job.m_options:
                 if m != job.m and m > job.m + free:
                     continue
                 rem = job.remaining_s(m)
                 if rem is None:
                     continue
-                candidates[m] = rem + (self.cfg.reshard_cost_s
-                                       if m != job.m else 0.0)
+                candidates[m] = rem + (reshard_s if m != job.m else 0.0)
             if not candidates:
                 continue
             # shrinking trades slack for cost; demand a safety margin so a
@@ -452,11 +501,11 @@ class FleetScheduler:
                 predicted_remaining_current=rem_cur,
                 predicted_remaining_target=candidates[target]))
             old = job.m
-            self._execute_resize(job, target, why, decisions)
+            self._execute_resize(step, job, target, why, decisions)
             self._last_resize[name] = step
             decisions.append(f"resize:{name}:{old}->{target}:{why}")
 
-    def _execute_resize(self, job: TrainingJob, target: int,
+    def _execute_resize(self, step: int, job: TrainingJob, target: int,
                         why: str, decisions: List[str]) -> None:
         if target > job.m:
             self.cluster.allocate(job.name, target - job.m)
@@ -467,7 +516,8 @@ class FleetScheduler:
                           key=lambda h: (self.cluster.host_multiplier(h), h))
             self.cluster.release(job.name, keep[target:])
         job.m = target
-        job.penalty_s += self.cfg.reshard_cost_s
+        self._charge_recovery(step, job, "reshard", self.cfg.reshard_cost_s,
+                              decisions)
         if job.executor is not None:
             # the chaos executor contract: checkpoint, then re-shard onto
             # the new parallelism (SSPLocalSGD re-partitions; the LM

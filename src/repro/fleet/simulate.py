@@ -288,9 +288,90 @@ def build_drift_scenario(seed: int, *, ticks: int = DRIFT_TICKS,
     return trace, jobs, deployments, cfg
 
 
+# ---------------------------------------------------------------------------
+# The migration scenario: measured recovery costs flip a resize decision
+# ---------------------------------------------------------------------------
+MIG_TICKS = 96
+MIG_TICK_S = 300.0
+MIG_HOSTS = 12
+
+
+def build_migration_scenario(seed: int, *, ticks: int = MIG_TICKS,
+                             tick_s: float = MIG_TICK_S,
+                             n_hosts: int = MIG_HOSTS,
+                             trace: Optional[ChaosTrace] = None,
+                             measured: bool = True):
+    """(trace, jobs, deployments, cfg) for the measured-recovery-cost loop.
+
+    The scheduler's planning constants still price a restore/re-shard as a
+    stop-the-world 1800s event, but the job actually recovers in 40s (the
+    async sharded checkpoint + live migration path:
+    ``actual_recovery_s=40``).  Four early injected preemptions make the
+    job pay — and, with ``measured=True``, *measure* — real restores; the
+    drift detector sees the 1800s assumption is ~45x off and refits the
+    per-job recovery estimate to the measured 40s.
+
+    The deadline forces admission at m=4 (m=2 alone cannot make it from a
+    standing start).  Mid-run, once most of the work is done, shrinking to
+    m=2 becomes the cheaper host-second plan — but only if a re-shard
+    costs 40s; priced at the assumed 1800s the shrink never clears the
+    hysteresis + shrink-safety bar.  So the measured arm emits a
+    ``resize:job_mig:4->2:cost`` decision and finishes cheaper; the
+    control arm (``measured=False``, *same physics*: it also pays only
+    40s per recovery) plans with the stale constant and holds m=4 to the
+    end.  The flip is the acceptance artifact: a resize decision that
+    exists in one arm and not the other, caused only by measurement."""
+    if trace is None:
+        # background chaos off: every recovery in the log is an injected,
+        # deterministic one (same schedule for both arms)
+        trace = ChaosTrace.generate(seed, ticks, n_hosts, p_straggler=0.0,
+                                    p_slowdown=0.0, p_preempt=0.0,
+                                    p_membership=0.0, warmup=4)
+        # four preemptions on hosts the training job owns (serve_bg holds
+        # at most hosts 0-1; job_mig is admitted onto the next four):
+        # enough restore observations for min_points=3 plus one post-refit
+        trace.events.extend([
+            ChaosEvent(step=6, kind="preempt", host=3),
+            ChaosEvent(step=12, kind="preempt", host=4),
+            ChaosEvent(step=18, kind="preempt", host=3),
+            ChaosEvent(step=24, kind="preempt", host=4),
+        ])
+        trace.events.sort(key=lambda e: (e.step, e.host, e.kind))
+
+    # t_eps(4) ~= 14500s (~48 ticks); t_eps(2) ~= 1.56x that, so a
+    # deadline of 1.2 * t_eps(4) rules m=2 out at admission
+    model = training_model(compute_s=36.0, floor_s=0.05, log_s=0.02,
+                           per_m_s=0.005, rate=4.7e-3)
+    jobs = [
+        TrainingJob(
+            name="job_mig", eps=1e-2, arrival_s=0.0,
+            deadline_s=17400.0, m_options=(2, 4, 8),
+            model=model, ckpt_every_s=6 * tick_s,
+            actual_recovery_s=40.0),
+    ]
+    deployments = [
+        ServeDeployment(
+            name="serve_bg",
+            planner=serve_capacity_planner(dispatch_s=0.012,
+                                           per_seq_s=0.0030,
+                                           log_b_s=0.001),
+            trace=RequestTrace.diurnal(seed * 7919 + 5, ticks, tick_s,
+                                       base_qps=1.0, peak_qps=2.0,
+                                       burst_prob=0.0),
+            slo_p95_s=2.5, gen_tokens=32,
+            batch_grid=(1, 2, 4, 8), replica_options=(1, 2)),
+    ]
+    measured_cfg = DriftConfig(window=8, threshold=0.3, min_points=3,
+                               cooldown=8) if measured else None
+    cfg = FleetConfig(tick_s=tick_s, reshard_cost_s=1800.0,
+                      restore_cost_s=1800.0, measured=measured_cfg)
+    return trace, jobs, deployments, cfg
+
+
 _SCENARIOS = {
     "day": (build_day_scenario, DAY_TICKS, DAY_TICK_S, DAY_HOSTS),
     "drift": (build_drift_scenario, DRIFT_TICKS, DRIFT_TICK_S, DRIFT_HOSTS),
+    "migrate": (build_migration_scenario, MIG_TICKS, MIG_TICK_S, MIG_HOSTS),
 }
 
 
@@ -301,7 +382,8 @@ def run_fleet_sim(seed: int, *, ticks: Optional[int] = None,
                   scenario: str = "day",
                   drift: bool = False,
                   spans: bool = False,
-                  slo: bool = False) -> FleetRunLog:
+                  slo: bool = False,
+                  measured: bool = False) -> FleetRunLog:
     """One deterministic fleet run; everything derives from ``seed``.
 
     ``scenario`` picks the builder ("day" or "drift") and its defaults;
@@ -316,6 +398,8 @@ def run_fleet_sim(seed: int, *, ticks: Optional[int] = None,
     kwargs = dict(ticks=ticks, tick_s=tick_s, n_hosts=n_hosts, trace=trace)
     if scenario == "drift":
         kwargs["drift"] = drift
+    if scenario == "migrate":
+        kwargs["measured"] = measured
     trace, jobs, deployments, cfg = build(seed, **kwargs)
     if drift and cfg.drift is None:
         cfg = dataclasses.replace(cfg, drift=DriftConfig())
@@ -333,6 +417,8 @@ def run_fleet_sim(seed: int, *, ticks: Optional[int] = None,
         log.meta["spans"] = True
     if slo:
         log.meta["slo"] = True
+    if measured:
+        log.meta["measured"] = True
     return log
 
 
@@ -347,4 +433,5 @@ def replay(run_log: FleetRunLog) -> FleetRunLog:
                          scenario=meta.get("scenario", "day"),
                          drift=bool(meta.get("drift", False)),
                          spans=bool(meta.get("spans", False)),
-                         slo=bool(meta.get("slo", False)))
+                         slo=bool(meta.get("slo", False)),
+                         measured=bool(meta.get("measured", False)))

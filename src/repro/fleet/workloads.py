@@ -179,6 +179,12 @@ class TrainingJob:
     m_options: Tuple[int, ...]
     ckpt_every_s: float = 1800.0
     executor: Optional[Any] = None
+    # what one restore/re-shard of this job ACTUALLY costs (the async
+    # sharded checkpoint + live-migration path both reduce to placing
+    # shards from the last manifest onto a mesh, so one number prices
+    # both ops).  None = the scheduler's assumed config constants are
+    # accurate, which keeps pre-existing golden scenarios bit-identical.
+    actual_recovery_s: Optional[float] = None
 
     # -- scheduler-owned state -----------------------------------------
     state: str = "pending"       # pending -> queued -> running -> done

@@ -51,6 +51,17 @@ def main(argv=None) -> int:
     ap.add_argument("--hosts", type=int, default=None)
     ap.add_argument("--trace", default=None,
                     help="drive the fleet from this ChaosTrace JSON")
+    ap.add_argument("--scenario", default="day",
+                    choices=("day", "drift", "migrate"),
+                    help="scenario builder: the 24h day, the streaming-"
+                         "refit drift story, or the measured-recovery-cost "
+                         "migration story")
+    ap.add_argument("--drift", action="store_true",
+                    help="turn the scheduler's streaming pace refit on")
+    ap.add_argument("--measured", action="store_true",
+                    help="feed measured restore/re-shard wall-times back "
+                         "into resize planning (the migrate scenario's "
+                         "closed loop)")
     ap.add_argument("--out", default=None, help="write FleetRunLog JSON here")
     ap.add_argument("--spans", default=None, metavar="TRACE_JSON",
                     help="emit modeled-time tick/job/deployment spans and "
@@ -67,7 +78,6 @@ def main(argv=None) -> int:
 
     from repro.fleet import replay as replay_log
     from repro.fleet import run_fleet_sim
-    from repro.fleet.simulate import DAY_HOSTS, DAY_TICKS
     from repro.runtime.chaos import ChaosTrace
 
     if args.replay:
@@ -89,11 +99,17 @@ def main(argv=None) -> int:
         if args.hosts and args.hosts != trace.n_hosts:
             print(f"--hosts {args.hosts} ignored: the trace fixes the "
                   f"inventory at {trace.n_hosts} hosts", file=sys.stderr)
-    ticks = args.ticks or (trace.steps if trace else DAY_TICKS)
-    hosts = trace.n_hosts if trace else (args.hosts or DAY_HOSTS)
+    ticks = args.ticks or (trace.steps if trace else None)
+    hosts = trace.n_hosts if trace else args.hosts
     log = run_fleet_sim(args.seed, ticks=ticks, n_hosts=hosts, trace=trace,
-                        spans=bool(args.spans), slo=args.slo)
+                        scenario=args.scenario, drift=args.drift,
+                        spans=bool(args.spans), slo=args.slo,
+                        measured=args.measured)
     summarize(log)
+    if args.measured:
+        for e in log.events("ckpt_cost"):
+            print(f"  ckpt_cost tick {e.step:4d} {e.op}:{e.workload} "
+                  f"measured={e.wall_s:.0f}s planned={e.assumed_s:.0f}s")
     if args.slo:
         alerts = log.events("slo_alert")
         for a in alerts:

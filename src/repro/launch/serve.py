@@ -304,7 +304,30 @@ def _run_router(args, specs: List[TraceSpec], reference, n_replicas: int,
     routed = [router.submit(prompt, gen, arrival_step=arrival,
                             frontend_embeds=fe)
               for prompt, gen, arrival, fe in specs]
-    rstats = router.run()
+    if args.migrate_at is not None:
+        from repro.serve.migrate import migrate_replica
+
+        migrated = False
+        while not router.drained:
+            if router.step_count >= 100_000:
+                raise RuntimeError("trace did not drain in 100000 steps")
+            if router.step_count == args.migrate_at:
+                info = migrate_replica(
+                    router, args.migrate_replica,
+                    lambda: make_engine(args.migrate_replica))
+                migrated = True
+                print(f"migration: replica {info['replica']} handed off at "
+                      f"step {args.migrate_at} — {info['in_flight']} "
+                      f"requests in flight, {info['pages_in_use']} pages, "
+                      f"{info['nbytes'] / 1e6:.2f} MB cache in "
+                      f"{info['wall_s'] * 1e3:.0f} ms")
+            router.step()
+        if not migrated:
+            print(f"migration: trace drained before step {args.migrate_at} "
+                  f"(no handoff performed)")
+        rstats = router.stats()
+    else:
+        rstats = router.run()
     print(f"router: {rstats['dispatched']} requests over "
           f"{n_replicas} replicas {rstats['dispatch_per_replica']}, "
           f"affinity hit rate {rstats['affinity_hit_rate']:.2f} "
@@ -381,6 +404,15 @@ def main():
                     help="router overflow spill: an affinity winner more "
                          "than this many pending tokens above the fleet "
                          "minimum forfeits the request")
+    ap.add_argument("--migrate-at", type=int, default=None, metavar="STEP",
+                    help="live migration drill: at router step STEP, hand "
+                         "one replica off to a freshly built engine "
+                         "(serve/migrate.py) and keep serving — the "
+                         "bit-identity check then also proves migrated "
+                         "streams match the unmigrated control (implies "
+                         "--router)")
+    ap.add_argument("--migrate-replica", type=int, default=0, metavar="R",
+                    help="which replica --migrate-at hands off (default 0)")
     ap.add_argument("--router-log", default=None, metavar="PATH",
                     help="dump the combined router + replica event stream "
                          "as JSONL")
@@ -399,6 +431,8 @@ def main():
                     help="tensor-parallel world size per replica (forces K "
                          "host devices; must be first jax initialization)")
     args = ap.parse_args()
+    if args.migrate_at is not None:
+        args.router = True
     if args.router or args.trace:
         args.continuous = True
 

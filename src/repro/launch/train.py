@@ -113,12 +113,13 @@ class Trainer:
     def _save(self, block: bool = False):
         if self.ckpt is None:
             return
-        self.ckpt.save(
+        handle = self.ckpt.save_async(
             self.step,
             {"params": self.params, "opt_state": self.opt_state},
             metadata={"data_state": self.data.state_dict(),
-                      "arch": self.cfg.name},
-            block=block)
+                      "arch": self.cfg.name})
+        if block:
+            handle.wait()
 
     # ------------------------------------------------------------------
     def train_some(self, n_steps: int) -> Dict[str, float]:
@@ -264,6 +265,13 @@ class TrainerExecutor:
                                             local_steps=local_steps)
         self.trainer._step_fn = self.trainer._make_step()
 
+    def last_recovery_s(self, op: str) -> Optional[float]:
+        """Measured wall-time of the most recent restore/re-shard, read
+        from the CheckpointManager's timing log (both ops reduce to the
+        same place-shards-from-manifest move, recorded as a restore)."""
+        timing = self.trainer.ckpt.last_timing("restore")
+        return None if timing is None else float(timing["wall_s"])
+
 
 def run_chaos_lm(arch: str, trace, ckpt_dir: str, *, m0: int = 1,
                  m_options=(1, 2, 4), seed: int = 0):
@@ -272,6 +280,7 @@ def run_chaos_lm(arch: str, trace, ckpt_dir: str, *, m0: int = 1,
     restores, real mesh re-shards."""
     from repro.core.adaptive import AdaptiveController
     from repro.runtime.chaos import ChaosLoop, ClusterSim, default_system_model
+    from repro.telemetry import DriftConfig, StreamingCost
 
     executor = TrainerExecutor(arch, m0, ckpt_dir=ckpt_dir,
                                total_steps=trace.steps, seed=seed)
@@ -280,9 +289,16 @@ def run_chaos_lm(arch: str, trace, ckpt_dir: str, *, m0: int = 1,
     controller = AdaptiveController(
         system, target_gap=1.0, p_star=0.0, m_options=m_options,
         refit_every=15, window=80, reshard_cost_s=2.0, min_observations=20)
+    # the real trainer reports real restore wall-times (CheckpointManager
+    # timings), so the loop charges — and learns — measured recovery costs
+    # instead of the assumed constants; ckpt_cost/drift/refit events ride
+    # the run log's bus outside rows/signatures
+    measured = StreamingCost(
+        "recovery:lm", controller.reshard_cost_s,
+        DriftConfig(window=8, threshold=0.5, min_points=3, cooldown=8))
     loop = ChaosLoop(ClusterSim(trace), executor, controller,
                      base_compute_s=1.0, d=64, ckpt_every=10,
-                     restore_cost_s=3.0)
+                     restore_cost_s=3.0, measured_costs=measured)
     log = loop.run()
     log.meta.update(seed=seed, arch=arch, mode="lm")
     return log

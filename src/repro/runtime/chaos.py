@@ -55,7 +55,7 @@ from repro.telemetry import (
     read_events,
     warn_deprecated,
 )
-from repro.telemetry.refit import StreamingErnest
+from repro.telemetry.refit import StreamingCost, StreamingErnest
 
 EVENT_KINDS = ("straggler_on", "straggler_off", "slowdown", "preempt",
                "join", "leave")
@@ -403,7 +403,8 @@ class ChaosLoop:
                  base_compute_s: float = 1.0, d: int = 32,
                  ckpt_every: int = 10, restore_cost_s: float = 5.0,
                  relax_local_steps: int = 2, staleness_bound: int = 4,
-                 system_refit: Optional[StreamingErnest] = None):
+                 system_refit: Optional[StreamingErnest] = None,
+                 measured_costs: Optional[StreamingCost] = None):
         self.sim = sim
         self.executor = executor
         self.controller = controller
@@ -421,6 +422,15 @@ class ChaosLoop:
         # mutates in place, so refits flow straight into resize planning);
         # drift/refit events land on the run log's bus, not in its rows
         self.system_refit = system_refit
+        # opt-in measured recovery costs: when set AND the executor reports
+        # real restore/re-shard wall-times (duck-typed ``last_recovery_s``,
+        # e.g. launch.train.TrainerExecutor reading its CheckpointManager's
+        # timings), the loop charges the measured cost instead of the
+        # assumed constant and feeds it to the estimator — once the refit
+        # fires, the learned cost also replaces the controller's
+        # ``reshard_cost_s`` in resize planning.  Default off: the golden
+        # convex runs keep their assumed-constant wall model bit-identical.
+        self.measured_costs = measured_costs
         self._base_m_options = list(controller.m_options)
         self._relaxed: Dict[int, int] = {}   # host -> step relaxation began
         self.wall_s = 0.0
@@ -443,6 +453,26 @@ class ChaosLoop:
             opts = [1]
         self.controller.set_m_options(opts)
         return opts
+
+    def _recovery_cost_s(self, step: int, op: str, log: ChaosRunLog) -> float:
+        """The wall-clock a restore/re-shard costs this run: the executor's
+        measured wall time when measured-cost feedback is on (and the
+        executor reports one), the assumed constant otherwise."""
+        assumed = (self.controller.reshard_cost_s if op == "reshard"
+                   else self.restore_cost_s)
+        if self.measured_costs is None:
+            return assumed
+        last = getattr(self.executor, "last_recovery_s", None)
+        measured = last(op) if callable(last) else None
+        if measured is None:
+            return assumed
+        for ev in self.measured_costs.observe(step, measured, op=op):
+            log.emit(ev)
+        if self.measured_costs.learned is not None:
+            # propagate into planning: the controller prices resizes with
+            # the learned cost from here on
+            self.controller.reshard_cost_s = self.measured_costs.estimate_s
+        return measured
 
     def _reset_monitor(self, m: int) -> None:
         """After a resize the step-time level legitimately shifts; re-anchor
@@ -496,7 +526,7 @@ class ChaosLoop:
                     target = max(opts)
                     self.executor.restore()
                     self.executor.resize(target)
-                    self.wall_s += self.restore_cost_s
+                    self.wall_s += self._recovery_cost_s(step, "restore", log)
                     self._reset_monitor(target)
                     row["m"] = self.executor.m
                     row["decision"] = f"resize:{target}:capacity"
@@ -506,7 +536,7 @@ class ChaosLoop:
                 self.injector.check(step)
             except SimulatedFailure as e:
                 self.executor.restore()
-                self.wall_s += self.restore_cost_s
+                self.wall_s += self._recovery_cost_s(step, "restore", log)
                 self._reset_monitor(self.executor.m)
                 row.update(objective=objective, restore=f"{e.kind}@{e.step}",
                            step_s=0.0, wall_s=round(self.wall_s, 9))
@@ -547,7 +577,8 @@ class ChaosLoop:
                     elif ev.action == "hot_spare":
                         self.sim.hot_spare(ev.host)
                         self.executor.restore()
-                        self.wall_s += self.restore_cost_s
+                        self.wall_s += self._recovery_cost_s(step, "restore",
+                                                             log)
 
             # convergence-model refit + resize decision
             decision = self.controller.observe(step, self.executor.m,
@@ -557,7 +588,7 @@ class ChaosLoop:
                 if target != self.executor.m:
                     self.executor.checkpoint()
                     self.executor.resize(target)
-                    self.wall_s += self.controller.reshard_cost_s
+                    self.wall_s += self._recovery_cost_s(step, "reshard", log)
                     self._reset_monitor(target)
                     row["decision"] = f"resize:{target}"
 

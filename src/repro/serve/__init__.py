@@ -4,6 +4,12 @@ prefix-affinity router)."""
 
 from repro.serve.cache import init_paged_cache, write_prefill
 from repro.serve.engine import ServeEngine
+from repro.serve.migrate import (
+    MigrationError,
+    migrate_replica,
+    restore_engine,
+    snapshot_engine,
+)
 from repro.serve.paging import SCRATCH_PAGE, OutOfPages, PagePool
 from repro.serve.planner import CapacityPlanner
 from repro.serve.prefix import PrefixCache
@@ -13,6 +19,7 @@ from repro.serve.sharding import ShardingPlan
 
 __all__ = [
     "CapacityPlanner",
+    "MigrationError",
     "OutOfPages",
     "PagePool",
     "PrefixCache",
@@ -25,5 +32,8 @@ __all__ = [
     "ServeEngine",
     "ShardingPlan",
     "init_paged_cache",
+    "migrate_replica",
+    "restore_engine",
+    "snapshot_engine",
     "write_prefill",
 ]

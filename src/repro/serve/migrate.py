@@ -1,0 +1,419 @@
+"""Live serving-state migration: drain-free replica handoff (DESIGN.md §15).
+
+Resizing a serving fleet without this layer means draining: stop routing to
+the replica, wait for every in-flight request to finish, then kill it — tail
+latency of the longest request, paid on every resize.  Migration instead
+moves the replica's *entire* serving state between engine steps:
+
+* the paged KV/latent cache (every layer's page-major pools plus slot-major
+  recurrent state), pulled to host in one snapshot;
+* the page tables, per-slot lengths and pending tokens — the decode batch's
+  exact register state;
+* the ``PagePool`` free list **in order** and per-page refcounts, so
+  allocation order (and therefore page ids, and therefore everything keyed
+  on them) continues bit-identically;
+* the ``PrefixCache`` hash chains, full-prompt entries and LRU orders —
+  a migrated replica keeps winning the router's affinity probes;
+* the scheduler's admission queue, occupied slots and finished list, every
+  ``Request`` rebuilt field-for-field on the destination;
+* the speculative proposer's counters and per-slot source memory.
+
+Because the engine mutates state only inside ``step()``, a snapshot taken
+between steps is consistent by construction — no locks, no quiesce.  The
+restored engine's next step is bitwise the step the source engine would
+have taken: the engine's slot-independence guarantee (serve/engine.py)
+plus an exact state copy leave nothing to diverge.  ``migrate_replica``
+swaps the restored engine into a live ``Router`` at a step boundary and
+re-points the router's request handles, so from the caller's side the
+replica simply kept serving.  The handoff wall time rides the telemetry
+bus as a ``ckpt_cost`` event (``op="migrate"``) — the same stream the
+fleet scheduler's measured-recovery refit consumes.
+
+What does NOT migrate: model parameters (replicas of a deployment share
+weights; the destination engine already initialized them from the same
+seed — a mismatch is rejected), and telemetry (each engine keeps its own
+event stream; the router's combined view concatenates both lives).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+from repro.serve.prefix import FullPromptEntry, _chain_key
+from repro.serve.scheduler import Request, RequestState
+from repro.telemetry import CkptCostEvent
+
+SNAPSHOT_FORMAT = 1
+
+# every geometry field that shapes the decode computation or the step
+# schedule; a mismatch on any of these makes "bit-identical continuation"
+# unsatisfiable, so restore refuses rather than silently diverging
+_GEOMETRY_FIELDS = (
+    "arch",
+    "seed",
+    "max_batch",
+    "page_size",
+    "max_seq",
+    "num_pages",
+    "prefill_chunk",
+    "speculate",
+    "collect_logits",
+)
+
+
+class MigrationError(RuntimeError):
+    """A snapshot cannot be restored onto the given destination engine."""
+
+
+def _geometry(engine: ServeEngine) -> Dict[str, Any]:
+    return {
+        "arch": engine.cfg.name,
+        "seed": engine.seed,
+        "max_batch": engine.max_batch,
+        "page_size": engine.page_size,
+        "max_seq": engine.max_seq,
+        "num_pages": engine.pool.num_pages,
+        "prefill_chunk": engine.prefill_chunk,
+        "speculate": engine.speculate,
+        "collect_logits": engine.collect_logits,
+    }
+
+
+# ---------------------------------------------------------------------------
+# request (de)serialization
+# ---------------------------------------------------------------------------
+
+
+def _pack_request(req: Request) -> Dict[str, Any]:
+    return {
+        "rid": req.rid,
+        "prompt": req.prompt.copy(),
+        "max_new_tokens": req.max_new_tokens,
+        "arrival_step": req.arrival_step,
+        "frontend_embeds": (
+            None
+            if req.frontend_embeds is None
+            else np.asarray(req.frontend_embeds).copy()
+        ),
+        "state": req.state.value,
+        "slot": req.slot,
+        "page_ids": list(req.page_ids),
+        "n_shared_pages": req.n_shared_pages,
+        "prefill_skipped": req.prefill_skipped,
+        # full_entry is a live reference into the prefix cache; carry its
+        # chain key and re-link after the cache itself is restored
+        "full_entry_key": (
+            _chain_key(req.prompt) if req.full_entry is not None else None
+        ),
+        "generated": list(req.generated),
+        "logits_trace": (
+            None
+            if req.logits_trace is None
+            else [np.asarray(a).copy() for a in req.logits_trace]
+        ),
+        "admitted_step": req.admitted_step,
+        "finished_step": req.finished_step,
+        "prefill_s": req.prefill_s,
+        "prefill_pos": req.prefill_pos,
+        "first_token_step": req.first_token_step,
+    }
+
+
+def _unpack_request(d: Dict[str, Any], full: Dict[str, FullPromptEntry]) -> Request:
+    req = Request(
+        rid=d["rid"],
+        prompt=np.asarray(d["prompt"], np.int32),
+        max_new_tokens=d["max_new_tokens"],
+        arrival_step=d["arrival_step"],
+        frontend_embeds=d["frontend_embeds"],
+    )
+    req.state = RequestState(d["state"])
+    req.slot = d["slot"]
+    req.page_ids = list(d["page_ids"])
+    req.n_shared_pages = d["n_shared_pages"]
+    req.prefill_skipped = d["prefill_skipped"]
+    if d["full_entry_key"] is not None:
+        req.full_entry = full[d["full_entry_key"]]
+    req.generated = list(d["generated"])
+    if d["logits_trace"] is not None:
+        req.logits_trace = [a.copy() for a in d["logits_trace"]]
+    req.admitted_step = d["admitted_step"]
+    req.finished_step = d["finished_step"]
+    req.prefill_s = d["prefill_s"]
+    req.prefill_pos = d["prefill_pos"]
+    req.first_token_step = d["first_token_step"]
+    return req
+
+
+# ---------------------------------------------------------------------------
+# snapshot
+# ---------------------------------------------------------------------------
+
+
+def snapshot_engine(engine: ServeEngine) -> Dict[str, Any]:
+    """Consistent host-side snapshot of one engine's full serving state.
+
+    Must be called between engine steps (the engine mutates state only
+    inside ``step()``); the result is plain host data — numpy arrays and
+    builtin containers — safe to hold across the source engine's teardown.
+    """
+    prefix = None
+    if engine.prefix is not None:
+        p = engine.prefix
+        prefix = {
+            "pages": [(k, pid) for k, pid in p._pages.items()],
+            "parent": dict(p._parent),
+            "nchildren": dict(p._nchildren),
+            "full": [
+                (
+                    k,
+                    {
+                        "page_ids": list(e.page_ids),
+                        "last_logits": np.asarray(e.last_logits).copy(),
+                        "state": jax.tree_util.tree_map(np.copy, e.state),
+                        "tokens": None if e.tokens is None else e.tokens.copy(),
+                    },
+                )
+                for k, e in p._full.items()
+            ],
+            "hits": p.hits,
+            "pages_shared": p.pages_shared,
+            "prefills_skipped": p.prefills_skipped,
+            "draft_hit": p._draft_hit,
+        }
+    proposer = None
+    if engine.proposer is not None:
+        pr = engine.proposer
+        proposer = {
+            "proposals": pr.proposals,
+            "proposed_tokens": pr.proposed_tokens,
+            "accepted_tokens": pr.accepted_tokens,
+            "last_source": dict(pr._last_source),
+        }
+    sched = engine.scheduler
+    return {
+        "format": SNAPSHOT_FORMAT,
+        "geometry": _geometry(engine),
+        "step_count": engine.step_count,
+        "rid": engine._rid,
+        "lengths": engine.lengths.copy(),
+        "next_tokens": engine.next_tokens.copy(),
+        "page_tables": engine.page_tables.copy(),
+        "cache": jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), engine.cache
+        ),
+        "pool": {
+            "free": list(engine.pool._free),
+            "refcount": list(engine.pool._refcount),
+        },
+        "prefix": prefix,
+        "proposer": proposer,
+        "scheduler": {
+            "queue": [_pack_request(r) for r in sched.queue],
+            "slots": [
+                None if r is None else _pack_request(r) for r in sched.slots
+            ],
+            "finished": [_pack_request(r) for r in sched.finished],
+        },
+    }
+
+
+def snapshot_nbytes(snap: Dict[str, Any]) -> int:
+    """Serialized payload size: the paged cache dominates, so that is what
+    gets reported (request/prefix metadata is noise next to it)."""
+    return sum(
+        leaf.nbytes for leaf in jax.tree_util.tree_leaves(snap["cache"])
+    )
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+
+def _check_compatible(engine: ServeEngine, snap: Dict[str, Any]) -> None:
+    if snap.get("format") != SNAPSHOT_FORMAT:
+        raise MigrationError(
+            f"snapshot format {snap.get('format')!r} != {SNAPSHOT_FORMAT}"
+        )
+    dst = _geometry(engine)
+    bad = [
+        f"{k}: snapshot={snap['geometry'][k]!r} dest={dst[k]!r}"
+        for k in _GEOMETRY_FIELDS
+        if snap["geometry"][k] != dst[k]
+    ]
+    if bad:
+        raise MigrationError(
+            "destination engine geometry does not match the snapshot "
+            "(bit-identical continuation impossible): " + "; ".join(bad)
+        )
+    if (snap["prefix"] is None) != (engine.prefix is None):
+        raise MigrationError(
+            "prefix caching mismatch between snapshot and destination"
+        )
+    if engine.step_count or engine._rid or engine.scheduler.queue or any(
+        s is not None for s in engine.scheduler.slots
+    ):
+        raise MigrationError(
+            "destination engine must be fresh (it has served traffic; "
+            "restoring over live state would leak pages)"
+        )
+
+
+def restore_engine(
+    engine: ServeEngine, snap: Dict[str, Any]
+) -> Dict[int, Request]:
+    """Install ``snap`` onto a fresh, geometry-identical engine.
+
+    Returns ``{rid: Request}`` over every restored request (queued, active
+    and finished) so callers holding handles into the source engine — the
+    ``Router`` — can re-point them at the destination's objects.
+    """
+    _check_compatible(engine, snap)
+    engine.cache = jax.tree_util.tree_map(jnp.asarray, snap["cache"])
+    if engine.plan is not None:
+        engine.cache = engine.plan.shard_cache(engine.cache, engine.axes)
+    engine.page_tables = snap["page_tables"].copy()
+    engine.page_tables_dev = jnp.asarray(engine.page_tables)
+    if engine.plan is not None:
+        engine.page_tables_dev = engine.plan.put_replicated(
+            engine.page_tables_dev
+        )
+    engine.lengths = snap["lengths"].copy()
+    engine.next_tokens = snap["next_tokens"].copy()
+    engine.step_count = snap["step_count"]
+    engine._rid = snap["rid"]
+
+    pool = engine.pool
+    pool._free = deque(snap["pool"]["free"])
+    pool._refcount = list(snap["pool"]["refcount"])
+
+    full: Dict[str, FullPromptEntry] = {}
+    if snap["prefix"] is not None:
+        p, ps = engine.prefix, snap["prefix"]
+        p._pages = OrderedDict(ps["pages"])
+        p._parent = dict(ps["parent"])
+        p._nchildren = dict(ps["nchildren"])
+        p._full = OrderedDict(
+            (
+                k,
+                FullPromptEntry(
+                    tuple(e["page_ids"]),
+                    e["last_logits"].copy(),
+                    jax.tree_util.tree_map(np.copy, e["state"]),
+                    None if e["tokens"] is None else e["tokens"].copy(),
+                ),
+            )
+            for k, e in ps["full"]
+        )
+        p.hits = ps["hits"]
+        p.pages_shared = ps["pages_shared"]
+        p.prefills_skipped = ps["prefills_skipped"]
+        p._draft_hit = ps["draft_hit"]
+        full = dict(p._full)
+
+    if snap["proposer"] is not None and engine.proposer is not None:
+        pr, prs = engine.proposer, snap["proposer"]
+        pr.proposals = prs["proposals"]
+        pr.proposed_tokens = prs["proposed_tokens"]
+        pr.accepted_tokens = prs["accepted_tokens"]
+        pr._last_source = dict(prs["last_source"])
+
+    sched, ss = engine.scheduler, snap["scheduler"]
+    rid_map: Dict[int, Request] = {}
+
+    def build(d: Dict[str, Any]) -> Request:
+        req = _unpack_request(d, full)
+        rid_map[req.rid] = req
+        return req
+
+    sched.queue = [build(d) for d in ss["queue"]]
+    sched.slots = [None if d is None else build(d) for d in ss["slots"]]
+    sched.finished = [build(d) for d in ss["finished"]]
+    return rid_map
+
+
+# ---------------------------------------------------------------------------
+# router-level handoff
+# ---------------------------------------------------------------------------
+
+
+def migrate_replica(
+    router,
+    replica: int,
+    make_engine: Callable[[], ServeEngine],
+    *,
+    assumed_s: Optional[float] = None,
+) -> Dict[str, Any]:
+    """Hand replica ``replica`` off to a freshly built engine, live.
+
+    Call between router steps.  The source engine is snapshotted, the
+    destination (from ``make_engine``; must match the source's geometry)
+    restored, swapped into the router, and every ``RoutedRequest`` handle
+    pointing at the old engine re-bound — in-flight streams continue on
+    the destination bit-identically.  Emits a ``ckpt_cost`` event
+    (``op="migrate"``) on the router bus and returns the measured handoff
+    stats the launch CLI prints.
+    """
+    if not 0 <= replica < len(router.engines):
+        raise ValueError(
+            f"replica {replica} out of range for a "
+            f"{len(router.engines)}-replica fleet"
+        )
+    src = router.engines[replica]
+    t0 = time.perf_counter()
+    snap = snapshot_engine(src)
+    dst = make_engine()
+    rid_map = restore_engine(dst, snap)
+    dst.replica_id = replica
+    if dst.spans is not None:
+        dst.spans.set_trace(
+            "serve", dst.cfg.name, dst.seed, replica, replica=replica
+        )
+    router.engines[replica] = dst
+    in_flight = 0
+    for rr in router.requests:
+        if rr.replica == replica and rr.request is not None:
+            rr.request = rid_map[rr.request.rid]
+            if rr.request.state is not RequestState.FINISHED:
+                in_flight += 1
+    wall_s = time.perf_counter() - t0
+    nbytes = snapshot_nbytes(snap)
+    n_shards = len(jax.tree_util.tree_leaves(snap["cache"]))
+    router.tracker.emit(
+        CkptCostEvent(
+            step=router.step_count,
+            op="migrate",
+            wall_s=wall_s,
+            assumed_s=assumed_s,
+            workload=dst.cfg.name,
+            nbytes=nbytes,
+            n_shards=n_shards,
+            replica=replica,
+        )
+    )
+    return {
+        "replica": replica,
+        "wall_s": wall_s,
+        "nbytes": nbytes,
+        "n_shards": n_shards,
+        "requests": len(rid_map),
+        "in_flight": in_flight,
+        "pages_in_use": dst.pool.pages_in_use,
+    }
+
+
+__all__: List[str] = [
+    "MigrationError",
+    "migrate_replica",
+    "restore_engine",
+    "snapshot_engine",
+    "snapshot_nbytes",
+]

@@ -24,6 +24,7 @@ event kinds are part of the core schema so any log replays.
 from .events import (
     SCHEMA_VERSION,
     ChaosStepEvent,
+    CkptCostEvent,
     DriftDetected,
     Event,
     FleetTickEvent,
@@ -41,6 +42,7 @@ from .events import (
 )
 from .io import (
     append_jsonl,
+    atomic_write_bytes,
     atomic_write_json,
     atomic_write_text,
     file_lock,
@@ -51,6 +53,7 @@ from .refit import (
     DriftDetector,
     StreamingCapacity,
     StreamingConvergence,
+    StreamingCost,
     StreamingErnest,
 )
 from .tracker import (
@@ -71,6 +74,7 @@ from .tracker import (
 __all__ = [
     "SCHEMA_VERSION",
     "ChaosStepEvent",
+    "CkptCostEvent",
     "DriftConfig",
     "DriftDetected",
     "DriftDetector",
@@ -90,10 +94,12 @@ __all__ = [
     "StatsSink",
     "StreamingCapacity",
     "StreamingConvergence",
+    "StreamingCost",
     "StreamingErnest",
     "Tracker",
     "TuneEvent",
     "append_jsonl",
+    "atomic_write_bytes",
     "atomic_write_json",
     "atomic_write_text",
     "default_tracker",

@@ -407,6 +407,35 @@ class SloAlertEvent(Event):
 
 
 # ---------------------------------------------------------------------------
+# checkpoint / migration costs (no legacy shape)
+# ---------------------------------------------------------------------------
+
+
+@register
+@dataclass(frozen=True)
+class CkptCostEvent(Event):
+    """One measured checkpoint/restore/re-shard/migration wall-time.
+
+    Emitted wherever the fault-tolerance machinery actually runs — the
+    ``CheckpointManager`` writer thread, the chaos loop's restore path,
+    ``serve.migrate``'s replica handoff, and the fleet scheduler's
+    modeled recoveries — so planners can refit their *assumed* recovery
+    constants from *measured* cost (``assumed_s`` records what the
+    planner believed at the time, when known)."""
+
+    kind: ClassVar[str] = "ckpt_cost"
+
+    step: int
+    op: str  # "save" | "restore" | "reshard" | "migrate"
+    wall_s: float
+    assumed_s: Optional[float] = None
+    workload: str = ""  # job/deployment name, or "" for a standalone run
+    nbytes: int = 0
+    n_shards: int = 0
+    replica: int = -1
+
+
+# ---------------------------------------------------------------------------
 # streaming-refit lifecycle
 # ---------------------------------------------------------------------------
 

@@ -46,6 +46,22 @@ def atomic_write_json(path, payload: Any, *, indent: int = 2, sort_keys: bool = 
     atomic_write_text(path, json.dumps(payload, indent=indent, sort_keys=sort_keys))
 
 
+def atomic_write_bytes(path, data: bytes) -> None:
+    """Binary twin of :func:`atomic_write_text` — checkpoint shards route
+    here so a crash mid-save can never leave a torn ``.npz``."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
 @contextlib.contextmanager
 def file_lock(path):
     """Exclusive advisory lock on a sidecar file, serializing

@@ -28,7 +28,7 @@ from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
-from .events import DriftDetected, RefitEvent
+from .events import CkptCostEvent, DriftDetected, RefitEvent
 
 
 @dataclass(frozen=True)
@@ -139,6 +139,72 @@ class StreamingErnest:
             refit = self._refit(step)
             if refit is not None:
                 out.append(refit)
+        return out
+
+
+class StreamingCost:
+    """Windowed estimate of an operation's measured wall-time vs an
+    assumed planning constant.
+
+    Planners (the fleet scheduler, ``AdaptiveController``) price every
+    restore/re-shard with a fixed assumed constant.  This wrapper ingests
+    the *measured* wall-times the fault-tolerance machinery actually
+    reports (``ckpt_cost`` events), and when the drift detector sees the
+    assumption is persistently wrong it re-fits the estimate to the
+    trailing-window mean — ``estimate_s`` then answers with the learned
+    cost instead of the assumption, and the refit event records how far
+    off the assumption was.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        assumed_s: float,
+        cfg: Optional[DriftConfig] = None,
+        *,
+        window: int = 32,
+    ):
+        self.name = name
+        self.assumed_s = float(assumed_s)
+        self.detector = DriftDetector(name, cfg)
+        self._obs: Deque[float] = deque(maxlen=window)
+        self.learned: Optional[float] = None
+
+    @property
+    def estimate_s(self) -> float:
+        """The learned cost once refit; the assumed constant until then."""
+        return self.learned if self.learned is not None else self.assumed_s
+
+    def observe(self, step: int, measured_s: float, *, op: str = "restore", workload: str = "") -> List:
+        """Feed one measured wall-time; returns [CkptCostEvent, drift?, refit?]."""
+        self._obs.append(float(measured_s))
+        out: List = [
+            CkptCostEvent(
+                step=step,
+                op=op,
+                wall_s=float(measured_s),
+                assumed_s=self.estimate_s,
+                workload=workload,
+            )
+        ]
+        drift = self.detector.observe(step, self.estimate_s, measured_s)
+        if drift is not None:
+            out.append(drift)
+            before = drift.residual
+            self.learned = float(np.mean(self._obs))
+            after = float(
+                np.mean([abs(o - self.learned) / max(abs(self.learned), self.detector.cfg.eps) for o in self._obs])
+            )
+            out.append(
+                RefitEvent(
+                    step=step,
+                    model=self.name,
+                    n_obs=len(self._obs),
+                    residual_before=before,
+                    residual_after=after,
+                )
+            )
+            self.detector.reset()
         return out
 
 

@@ -1,0 +1,48 @@
+"""Regenerate fleet_migration_seed0.json — the golden run log for the
+measured-recovery-cost scenario at seed 0 (measurement ON).
+
+The fixture pins the closed measure->model->decide loop for recovery
+costs end to end: injected preemptions make the job pay (and report)
+real 40s restores while the scheduler's planning constants still assume
+a stop-the-world 1800s; the per-job StreamingCost refit replaces the
+assumption with the measured cost; and mid-run the now-correctly-priced
+shrink to m=2 clears the hysteresis bar — the ``resize:job_mig:4->2:cost``
+decision that the control arm (same physics, no measurement) never
+takes.  A change to the cost estimator, the drift thresholds, or the
+resize pricing shows up as a diff in the decision sequence — a
+deliberate behavior change regenerates the fixture with this script, an
+accidental one fails the golden test.
+
+  PYTHONPATH=src python tests/fixtures/make_fleet_migration_fixture.py
+"""
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent / "fleet_migration_seed0.json"
+
+
+def main():
+    from repro.fleet import replay, run_fleet_sim
+
+    log = run_fleet_sim(0, scenario="migrate", measured=True)
+    again = replay(log)
+    assert again.signature() == log.signature(), \
+        "refusing to write a fixture that does not replay bit-identically"
+    assert log.decisions("recost:"), "scenario no longer refits the cost"
+    assert any(d.startswith("resize:job_mig:4->2:cost")
+               for _, d in log.decisions("resize:")), \
+        "measured costs no longer flip the shrink decision"
+    control = run_fleet_sim(0, scenario="migrate", measured=False)
+    assert not control.decisions("resize:"), \
+        "the control arm must NOT resize (the flip is the artifact)"
+    assert (log.meta["summary"]["cost_host_hours"]
+            < control.meta["summary"]["cost_host_hours"]), \
+        "the measured arm must finish cheaper than the control arm"
+    job = log.meta["summary"]["jobs"]["job_mig"]
+    assert job["state"] == "done" and job["met_deadline"], \
+        "the measured arm must still meet the deadline"
+    log.save(OUT)
+    print(f"{len(log.rows)} ticks, {log.n_decisions()} decisions -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,20 @@
-"""Checkpoint manager: roundtrip, atomicity, retention, data-state resume."""
+"""Checkpoint manager: roundtrip, atomicity, retention, data-state resume,
+sharded format-2 layout, corruption handling, and async-write handles."""
+
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint.manager import CheckpointManager, _flatten, _unflatten
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    CorruptCheckpoint,
+    _flatten,
+    _unflatten,
+)
 from repro.data.pipeline import SyntheticTokens
 
 
@@ -93,6 +102,169 @@ def test_roundtrip_property(tmp_path_factory, seed):
     restored, _ = mgr.restore()
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# format 2: sharding, corruption, fallback, async handles
+# ---------------------------------------------------------------------------
+def test_sharded_layout_and_manifest_schema(tmp_path):
+    """Tiny shard budget -> one shard per leaf; the manifest indexes every
+    shard with per-array shape/dtype and is the newest file in the dir."""
+    mgr = CheckpointManager(tmp_path, async_write=False, shard_bytes=1)
+    mgr.save_async(3, _tree(3)).wait()
+    step_dir = tmp_path / "step_00000003"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    assert manifest["format"] == 2 and manifest["step"] == 3
+    n_leaves = len(_flatten(_tree(3)))
+    assert manifest["n_shards"] == len(manifest["shards"]) == n_leaves
+    for entry in manifest["shards"]:
+        assert (step_dir / entry["file"]).exists()
+    restored, _ = mgr.restore()
+    for a, b in zip(jax.tree.leaves(_tree(3)), jax.tree.leaves(restored)):
+        _assert_equal(a, b)
+
+
+def test_async_handle_reports_measured_cost(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_write=True)
+    h = mgr.save_async(7, _tree(7)).wait()
+    assert h.done and h.step == 7
+    assert h.wall_s is not None and h.wall_s > 0
+    assert h.nbytes > 0 and h.n_shards >= 1
+    mgr.restore()
+    assert mgr.last_timing("save")["step"] == 7
+    assert mgr.last_timing("restore")["wall_s"] > 0
+    assert [t["op"] for t in mgr.timings] == ["save", "restore"]
+
+
+def test_async_write_error_surfaces_on_wait(tmp_path, monkeypatch):
+    import repro.checkpoint.manager as M
+
+    def boom(*a, **kw):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(M, "atomic_write_bytes", boom)
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    handle = mgr.save_async(1, _tree())
+    with pytest.raises(OSError, match="disk gone"):
+        handle.wait()
+    assert mgr.all_steps() == []
+
+
+def test_corrupt_manifest_raises_typed_error(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save_async(1, _tree(1)).wait()
+    (tmp_path / "step_00000001" / "manifest.json").write_text("{not json")
+    with pytest.raises(CorruptCheckpoint, match="unreadable manifest"):
+        mgr.restore(step=1, fallback=False)
+    assert mgr.all_steps() == []
+
+
+def test_shard_count_mismatch_detected(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False, shard_bytes=1)
+    mgr.save_async(1, _tree(1)).wait()
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["n_shards"] += 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(CorruptCheckpoint, match="shard count"):
+        mgr.restore(step=1, fallback=False)
+
+
+def test_missing_shard_detected(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False, shard_bytes=1)
+    mgr.save_async(1, _tree(1)).wait()
+    (tmp_path / "step_00000001" / "shard_0000.npz").unlink()
+    with pytest.raises(CorruptCheckpoint, match="missing shard"):
+        mgr.restore(step=1, fallback=False)
+
+
+def test_corrupt_step_falls_back_with_warning(tmp_path):
+    """The auto-fallback contract: a torn newest step costs a warning, not
+    the run — restore serves the previous complete step."""
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save_async(1, _tree(1)).wait()
+    mgr.save_async(2, _tree(2)).wait()
+    (tmp_path / "step_00000002" / "shard_0000.npz").write_bytes(b"torn")
+    with pytest.warns(RuntimeWarning, match="fell back to step 1"):
+        restored, meta = mgr.restore(step=2)
+    assert meta["step"] == 1
+    for a, b in zip(jax.tree.leaves(_tree(1)), jax.tree.leaves(restored)):
+        _assert_equal(a, b)
+
+
+def test_gc_never_deletes_newest_complete_manifest(tmp_path):
+    """keep=1 with the newest step torn: GC must preserve step 2 (the
+    newest COMPLETE manifest), or a crash after GC would lose everything."""
+    mgr = CheckpointManager(tmp_path, keep=1, async_write=False)
+    mgr.save_async(1, _tree(1)).wait()
+    mgr.save_async(2, _tree(2)).wait()
+    (tmp_path / "step_00000003").mkdir()  # torn: no manifest at all
+    mgr.save_async(4, _tree(4)).wait()    # triggers GC
+    assert mgr.all_steps() == [4]
+    _, meta = mgr.restore()
+    assert meta["step"] == 4
+
+
+def test_legacy_format1_checkpoint_still_restores(tmp_path):
+    """Pre-format-2 layout (arrays.npz + COMMITTED + format-1 manifest)
+    written by old trainers must keep restoring."""
+    import io as _io
+
+    step_dir = tmp_path / "step_00000005"
+    step_dir.mkdir(parents=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(_tree(5)).items()
+            if np.asarray(v).dtype.kind in "fiu"}
+    buf = _io.BytesIO()
+    np.savez(buf, **flat)
+    (step_dir / "arrays.npz").write_bytes(buf.getvalue())
+    (step_dir / "manifest.json").write_text(json.dumps({
+        "format": 1, "step": 5,
+        "metadata": {"step": 5},
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }))
+    (step_dir / "COMMITTED").write_text("ok")
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.all_steps() == [5]
+    restored, meta = mgr.restore()
+    assert meta["step"] == 5
+    for k, v in flat.items():
+        np.testing.assert_array_equal(_flatten(restored)[k], v)
+
+
+def test_newer_format_rejected(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save_async(1, _tree()).wait()
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format"] = 99
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(CorruptCheckpoint, match="newer than supported"):
+        mgr.restore(step=1, fallback=False)
+
+
+def test_legacy_save_shim_warns_once(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    CheckpointManager._warned_legacy_save = False
+    with pytest.warns(DeprecationWarning, match="save_async"):
+        mgr.save(1, _tree(1), block=True)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        mgr.save(2, _tree(2), block=True)  # second call: silent
+    assert mgr.all_steps() == [1, 2]
+
+
+def test_restore_sharded_places_leaves(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    t = _tree(4)
+    mgr.save_async(1, t).wait()
+    shardings = jax.tree.map(lambda _: None, jax.tree.map(np.asarray, t))
+    placed, meta = mgr.restore_sharded(shardings)
+    assert meta["step"] == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(placed)):
+        assert isinstance(b, jax.Array)
+        _assert_equal(a, b)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,151 @@
+"""Measured recovery costs closing the fleet resize loop.
+
+The scheduler's planning constants price every restore/re-shard as a
+stop-the-world 1800s event, but the job actually recovers in 40s (the
+async sharded checkpoint + live migration path; ``actual_recovery_s``).
+With ``FleetConfig.measured`` on, every recovery the job pays feeds its
+per-job ``StreamingCost``; the drift detector sees the assumption is
+~45x off, refits the estimate to the measured cost, and mid-run the
+now-correctly-priced shrink to m=2 clears the hysteresis bar — the
+``resize:job_mig:4->2:cost`` flip the control arm (identical physics,
+no measurement) never takes.
+
+Golden fixture: fleet_migration_seed0.json (regenerate with
+tests/fixtures/make_fleet_migration_fixture.py).  Replay guarantees
+mirror tests/test_fleet_drift.py.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.fleet import (
+    FleetRunLog,
+    build_migration_scenario,
+    replay,
+    run_fleet_sim,
+)
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+
+@pytest.fixture(scope="module")
+def measured_run():
+    return run_fleet_sim(0, scenario="migrate", measured=True)
+
+
+@pytest.fixture(scope="module")
+def control_run():
+    return run_fleet_sim(0, scenario="migrate", measured=False)
+
+
+# ------------------------------------------------------- the closed loop
+def test_measured_costs_flip_the_resize_decision(measured_run, control_run):
+    """The acceptance artifact: a cost-motivated shrink that exists in the
+    measured arm and not in the control arm, caused only by measurement
+    (both arms pay the same 40s per recovery)."""
+    flips = [d for _, d in measured_run.decisions("resize:job_mig")
+             if d.startswith("resize:job_mig:4->2:cost")]
+    assert flips, "measured arm lost the 4->2 cost flip"
+    assert not control_run.decisions("resize:"), \
+        "control arm resized despite planning with the stale constant"
+
+
+def test_refit_fires_after_min_points_restores(measured_run):
+    """The recovery-cost refit lands exactly on the min_points-th measured
+    restore (three injected preemptions in) and reprices to ~40s."""
+    recosts = measured_run.decisions("recost:job_mig")
+    assert recosts, "no recovery-cost refit decision recorded"
+    preempt_steps = sorted(e.step for e in measured_run.trace.events
+                           if e.kind == "preempt")
+    assert recosts[0][0] == preempt_steps[2]
+    assert recosts[0][1] == "recost:job_mig:40s"
+    # the flip happens strictly after the refit repriced the shrink
+    flip_step = measured_run.decisions("resize:job_mig")[0][0]
+    assert flip_step > recosts[0][0]
+
+
+def test_ckpt_cost_events_record_measured_vs_assumed(measured_run):
+    """Every recovery the job pays rides the bus as a typed ckpt_cost
+    event: measured wall time vs the estimate planning used at that
+    moment (the assumption before the refit, the learned cost after)."""
+    costs = measured_run.events("ckpt_cost")
+    assert len(costs) >= 4     # 4 injected restores + the flip's reshard
+    assert all(e.wall_s == pytest.approx(40.0) for e in costs)
+    assert all(e.workload == "job_mig" for e in costs)
+    pre = [e for e in costs if e.assumed_s == pytest.approx(1800.0)]
+    post = [e for e in costs if e.assumed_s == pytest.approx(40.0)]
+    assert pre and post, "refit must split the stream into before/after"
+    assert max(e.step for e in pre) < min(e.step for e in post)
+    assert any(e.op == "reshard" for e in post), \
+        "the flip's re-shard must be measured too"
+
+
+def test_refit_reduces_residuals(measured_run):
+    refits = measured_run.events("refit")
+    detected = measured_run.events("drift")
+    assert refits and len(refits) == len(detected)
+    for det, ref in zip(detected, refits):
+        assert det.step == ref.step and det.model == ref.model
+        assert ref.model == "recovery:job_mig"
+        assert ref.residual_before == pytest.approx(det.residual)
+        assert ref.residual_after < ref.residual_before
+        assert det.residual > det.threshold
+
+
+def test_measured_arm_finishes_cheaper_and_in_time(measured_run,
+                                                   control_run):
+    m = measured_run.meta["summary"]
+    c = control_run.meta["summary"]
+    assert m["jobs"]["job_mig"]["state"] == "done"
+    assert m["jobs"]["job_mig"]["met_deadline"]
+    assert c["jobs"]["job_mig"]["state"] == "done"
+    assert m["cost_host_hours"] < c["cost_host_hours"]
+
+
+def test_measured_events_stay_out_of_rows(measured_run):
+    """ckpt_cost/drift/refit telemetry rides the same bus but never leaks
+    into the row stream or signatures (pre-measurement goldens stay
+    comparable)."""
+    kinds = {e.kind for e in measured_run.events()}
+    assert {"fleet_tick", "ckpt_cost", "drift", "refit"} <= kinds
+    assert len(measured_run.rows) == len(measured_run.events("fleet_tick"))
+    assert all(r.keys() == measured_run.rows[0].keys()
+               for r in measured_run.rows)
+
+
+# ------------------------------------------------------- replay + golden
+def test_migration_replay_is_bit_identical(measured_run):
+    again = replay(measured_run)
+    assert again.signature() == measured_run.signature()
+    assert again.meta["summary"] == measured_run.meta["summary"]
+
+
+def test_migration_replay_from_event_log(measured_run, tmp_path):
+    p = tmp_path / "migrate.jsonl"
+    measured_run.to_jsonl(p)
+    back = FleetRunLog.from_jsonl(p)
+    assert back.signature() == measured_run.signature()
+    assert ([e.to_dict() for e in back.events()]
+            == [e.to_dict() for e in measured_run.events()])
+    again = replay(back)
+    assert again.signature() == measured_run.signature()
+
+
+def test_golden_migration_trace(measured_run):
+    """The checked-in golden log replays exactly on the control sequence
+    and to float tolerance on modeled quantities."""
+    golden = FleetRunLog.load(FIXTURES / "fleet_migration_seed0.json")
+    assert measured_run.control_signature() == golden.control_signature()
+    for got, want in zip(measured_run.rows, golden.rows):
+        for name, wj in want["jobs"].items():
+            gj = got["jobs"][name]
+            assert gj["prog"] == pytest.approx(wj["prog"], rel=1e-6,
+                                               abs=1e-9)
+        assert got["cost_hh"] == pytest.approx(want["cost_hh"], rel=1e-9)
+
+
+def test_golden_migration_fixture_is_self_consistent():
+    golden = FleetRunLog.load(FIXTURES / "fleet_migration_seed0.json")
+    regen, _, _, _ = build_migration_scenario(int(golden.meta["seed"]))
+    assert regen == golden.trace
+    assert golden.meta["scenario"] == "migrate" and golden.meta["measured"]

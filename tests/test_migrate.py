@@ -1,0 +1,288 @@
+"""Live serving-state migration: snapshot/restore exactness, router-level
+drain-free handoff, and the state the snapshot must carry.
+
+The contract under test is the strongest one the engine can offer: a
+replica restored from a between-steps snapshot continues **bit-identically**
+— every remaining token and logit equals what the unmigrated engine would
+have produced — because the snapshot is an exact copy of every mutable
+input to ``step()`` (paged cache, page tables, lengths, pending tokens,
+pool free-list order, prefix chains, scheduler queue/slots, proposer
+memory).  See serve/migrate.py and DESIGN.md §15."""
+import numpy as np
+import pytest
+
+from repro.serve import (
+    MigrationError,
+    Router,
+    ServeEngine,
+    migrate_replica,
+    restore_engine,
+    snapshot_engine,
+)
+from repro.serve.scheduler import RequestState
+from repro.telemetry import from_dict
+
+ARCH = "qwen3-14b"  # dense: slot-independent decode
+GEOM = dict(smoke=True, max_batch=2, page_size=8, max_seq=64, seed=0)
+PS = GEOM["page_size"]
+
+
+def _prompt(rng, n):
+    return rng.randint(0, 256, n).astype(np.int32)
+
+
+def _specs(seed=0, n=6):
+    """Mixed lengths, staggered arrivals, shared head on every third."""
+    rng = np.random.RandomState(seed)
+    head = _prompt(rng, 2 * PS)
+    specs = []
+    for i in range(n):
+        if i % 3 == 0:
+            prompt = np.concatenate([head, _prompt(rng, 3)])
+        else:
+            prompt = _prompt(rng, int(rng.choice([7, 12, 21])))
+        specs.append((prompt, int(rng.choice([4, 6])), (i // 2) * 2))
+    return specs
+
+
+def _submit_all(target, specs):
+    return [target.submit(p, g, arrival_step=a) for p, g, a in specs]
+
+
+def _run_with_handoff(migrate_step, specs, **engine_kw):
+    """Serve ``specs`` on one engine, handing off to a fresh engine at
+    ``migrate_step``; returns the request handles whose streams finished
+    on the destination."""
+    src = ServeEngine(ARCH, **GEOM, **engine_kw)
+    reqs = _submit_all(src, specs)
+    for _ in range(migrate_step):
+        src.step()
+    dst = ServeEngine(ARCH, **GEOM, **engine_kw)
+    rid_map = restore_engine(dst, snapshot_engine(src))
+    dst.run()
+    return [rid_map[r.rid] for r in reqs], src, dst
+
+
+# ----------------------------------------------------------- bit identity
+def test_restored_engine_continues_bit_identically():
+    specs = _specs()
+    base = ServeEngine(ARCH, collect_logits=True, **GEOM)
+    base_reqs = _submit_all(base, specs)
+    base.run()
+
+    moved, src, dst = _run_with_handoff(3, specs, collect_logits=True)
+    assert any(r.state is not RequestState.FINISHED
+               for r in src.scheduler.slots + src.scheduler.queue
+               if r is not None), "handoff must catch requests in flight"
+    for got, want in zip(moved, base_reqs):
+        assert got.generated == want.generated
+        assert len(got.logits_trace) == len(want.logits_trace)
+        for lg, lw in zip(got.logits_trace, want.logits_trace):
+            np.testing.assert_array_equal(lg, lw)
+    # the destination resumed the source's step clock, not its own
+    assert dst.step_count == base.step_count
+
+
+@pytest.mark.parametrize("migrate_step", [1, 2, 5])
+def test_handoff_step_does_not_change_outputs(migrate_step):
+    specs = _specs(seed=3)
+    base = ServeEngine(ARCH, **GEOM)
+    base_reqs = _submit_all(base, specs)
+    base.run()
+    moved, _, _ = _run_with_handoff(migrate_step, specs)
+    for got, want in zip(moved, base_reqs):
+        assert got.generated == want.generated
+
+
+def test_migrate_mid_chunked_prefill():
+    """A snapshot taken while a prompt is streaming in chunk by chunk must
+    carry the half-written pages and the prefill cursor."""
+    rng = np.random.RandomState(7)
+    specs = [(_prompt(rng, 30), 5, 0), (_prompt(rng, 28), 4, 0),
+             (_prompt(rng, 21), 4, 1)]
+    base = ServeEngine(ARCH, prefill_chunk=4, **GEOM)
+    base_reqs = _submit_all(base, specs)
+    base.run()
+
+    src = ServeEngine(ARCH, prefill_chunk=4, **GEOM)
+    reqs = _submit_all(src, specs)
+    src.step()
+    assert any(r is not None and r.state is RequestState.PREFILLING
+               for r in src.scheduler.slots), \
+        "test premise: a request must be mid-prefill at the snapshot"
+    dst = ServeEngine(ARCH, prefill_chunk=4, **GEOM)
+    rid_map = restore_engine(dst, snapshot_engine(src))
+    dst.run()
+    for req, want in zip(reqs, base_reqs):
+        assert rid_map[req.rid].generated == want.generated
+
+
+def test_migrate_during_speculative_decode():
+    """Speculation state (proposer counters, per-slot draft-source memory,
+    the prefix cache's stored draft sources) migrates too: the restored
+    engine keeps drafting and the committed streams stay exact.
+
+    Workload is the self-continuation setup from test_serve_speculative:
+    a follow-up prompt extends a stored document, so greedy decode retraces
+    the stored continuation and drafts are dense and accepted."""
+
+    def drive(migrate_at=None):
+        eng = ServeEngine(ARCH, speculate=4, **GEOM)
+        seed = _prompt(np.random.RandomState(3), 16)
+        doc_req = eng.submit(seed, 40)
+        eng.run()
+        doc = np.concatenate([seed, np.asarray(doc_req.generated, np.int32)])
+        eng.submit(doc, 1)  # page-aligned: stored as a draft source
+        eng.run()
+        follow = eng.submit(doc[:33].copy(), 20)
+        if migrate_at is None:
+            eng.run()
+            return follow, eng
+        for _ in range(migrate_at):
+            eng.step()
+        dst = ServeEngine(ARCH, speculate=4, **GEOM)
+        rid_map = restore_engine(dst, snapshot_engine(eng))
+        dst.run()
+        return rid_map[follow.rid], dst
+
+    base_follow, base = drive()
+    assert base.proposer.accepted_tokens > 0, \
+        "test premise: speculation must fire on this trace"
+    moved_follow, dst = drive(migrate_at=3)
+    assert moved_follow.generated == base_follow.generated
+    # the verify path keeps running on the destination after the hop...
+    assert any(e.op == "verify" for e in dst.events("serve_step"))
+    # ...and the counters carried over: both lives sum to one life's worth
+    assert dst.proposer.proposed_tokens == base.proposer.proposed_tokens
+    assert dst.proposer.accepted_tokens == base.proposer.accepted_tokens
+
+
+# ------------------------------------------------- carried state details
+def test_pool_and_prefix_state_survive_the_hop():
+    src = ServeEngine(ARCH, **GEOM)
+    reqs = _submit_all(src, _specs(seed=5))
+    for _ in range(4):
+        src.step()
+    dst = ServeEngine(ARCH, **GEOM)
+    restore_engine(dst, snapshot_engine(src))
+    # free-list ORDER (not just the set) must match: allocation order feeds
+    # page ids, which feed page tables, which feed everything downstream
+    assert list(dst.pool._free) == list(src.pool._free)
+    assert dst.pool._refcount == src.pool._refcount
+    assert list(dst.prefix._pages.items()) == list(src.prefix._pages.items())
+    assert list(dst.prefix._full.keys()) == list(src.prefix._full.keys())
+    assert dst.prefix.hits == src.prefix.hits
+    assert np.array_equal(dst.page_tables, src.page_tables)
+    assert np.array_equal(dst.lengths, src.lengths)
+    assert np.array_equal(dst.next_tokens, src.next_tokens)
+    assert dst._rid == src._rid
+
+    # the migrated prefix cache still serves the skip-prefill fast path
+    src.run()
+    dst.run()
+    done = [r for r in reqs if len(r.prompt) % PS == 0]
+    if done:
+        again = dst.submit(done[0].prompt.copy(), 2)
+        dst.run()
+        assert again.prefill_skipped
+
+
+def test_page_leak_invariant_after_migration():
+    """Drained + cleared after a mid-trace hop -> zero pages in use; a
+    refcount mistake in the snapshot would surface here as a leak or a
+    double free."""
+    moved, _, dst = _run_with_handoff(3, _specs(seed=9))
+    assert all(r.state is RequestState.FINISHED for r in moved)
+    dst.prefix.clear(dst.pool)
+    assert dst.pool.pages_in_use == 0
+
+
+# ------------------------------------------------------- router handoff
+def test_router_live_migration_bit_identical_to_single_engine():
+    specs = _specs(seed=0)
+    ref = ServeEngine(ARCH, **GEOM)
+    ref_reqs = _submit_all(ref, specs)
+    ref.run()
+
+    router = Router([ServeEngine(ARCH, **GEOM) for _ in range(2)],
+                    spill_slack=512)
+    routed = _submit_all(router, specs)
+    handed_off = None
+    while not router.drained:
+        if router.step_count == 3:
+            handed_off = migrate_replica(
+                router, 0, lambda: ServeEngine(ARCH, **GEOM))
+        router.step()
+    assert handed_off is not None and handed_off["in_flight"] > 0
+    for rr, want in zip(routed, ref_reqs):
+        assert rr.generated == want.generated
+    assert router.stats()["requests_finished"] == len(specs)
+
+
+def test_migration_emits_ckpt_cost_event():
+    router = Router([ServeEngine(ARCH, **GEOM) for _ in range(2)])
+    _submit_all(router, _specs(seed=2))
+    router.step()
+    router.step()
+    info = migrate_replica(router, 1, lambda: ServeEngine(ARCH, **GEOM))
+    evs = router.events("ckpt_cost")
+    assert len(evs) == 1
+    ev = evs[0]
+    assert ev.op == "migrate" and ev.replica == 1
+    assert ev.wall_s == pytest.approx(info["wall_s"])
+    assert ev.nbytes == info["nbytes"] > 0
+    assert ev.n_shards == info["n_shards"] > 0
+    assert from_dict(ev.to_dict()) == ev
+    router.run()
+
+
+def test_migrated_replica_keeps_winning_affinity_probes():
+    """The router's whole point is prefix affinity; a handoff that lost the
+    prefix chains would silently cold-prefill every later relative."""
+    rng = np.random.RandomState(13)
+    head = _prompt(rng, 2 * PS)
+    router = Router([ServeEngine(ARCH, **GEOM) for _ in range(2)],
+                    spill_slack=512)
+    router.submit(np.concatenate([head, _prompt(rng, 3)]), 3, arrival_step=0)
+    router.submit(_prompt(rng, 7), 3, arrival_step=0)
+    late = router.submit(np.concatenate([head, _prompt(rng, 5)]), 3,
+                         arrival_step=6)
+    while not router.drained:
+        if router.step_count == 4:
+            migrate_replica(router, 0, lambda: ServeEngine(ARCH, **GEOM))
+        router.step()
+    ev = next(e for e in router.events("router") if e.rid == late.rid)
+    assert ev.reason == "affinity" and ev.replica == 0
+    assert ev.matched_pages == 2
+
+
+# ----------------------------------------------------------- guard rails
+def test_geometry_mismatch_is_rejected():
+    src = ServeEngine(ARCH, **GEOM)
+    _submit_all(src, _specs())
+    src.step()
+    snap = snapshot_engine(src)
+    for bad in (dict(page_size=16, max_seq=64),
+                dict(max_batch=4),
+                dict(seed=1),
+                dict(prefill_chunk=4)):
+        dst = ServeEngine(ARCH, **{**GEOM, **bad})
+        with pytest.raises(MigrationError, match="geometry"):
+            restore_engine(dst, snap)
+
+
+def test_restore_onto_used_engine_is_rejected():
+    src = ServeEngine(ARCH, **GEOM)
+    _submit_all(src, _specs())
+    src.step()
+    snap = snapshot_engine(src)
+    used = ServeEngine(ARCH, **GEOM)
+    used.submit(np.arange(7, dtype=np.int32), 2)
+    with pytest.raises(MigrationError, match="fresh"):
+        restore_engine(used, snap)
+
+
+def test_bad_replica_index_is_rejected():
+    router = Router([ServeEngine(ARCH, **GEOM)])
+    with pytest.raises(ValueError, match="out of range"):
+        migrate_replica(router, 1, lambda: ServeEngine(ARCH, **GEOM))
